@@ -1,0 +1,58 @@
+"""Shared benchmark scaffolding: policies, workloads, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines.arms_policy import ARMSPolicy
+from repro.baselines.hemem import HeMemPolicy
+from repro.baselines.memtis import MemtisPolicy
+from repro.baselines.static import AllSlowPolicy, OraclePolicy
+from repro.baselines.tpp import TPPPolicy
+from repro.simulator import workloads
+from repro.simulator.engine import run
+from repro.simulator.machine import MACHINES, NUMA, PMEM_LARGE
+
+T, N_PAGES = 300, 2048
+K = N_PAGES // 8          # 1:8 fast:slow ratio (paper default)
+
+WORKLOAD_SET = ["gups", "btree", "silo-ycsb", "silo-tpcc", "xsbench",
+                "gapbs-bc", "gapbs-pr", "gapbs-cc", "liblinear"]
+
+POLICIES = {
+    "all-slow": AllSlowPolicy,
+    "hemem": HeMemPolicy,
+    "memtis": MemtisPolicy,
+    "tpp": TPPPolicy,
+    "arms": ARMSPolicy,
+    "oracle": OraclePolicy,
+}
+
+_ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.2f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def header():
+    print("name,us_per_call,derived", flush=True)
+
+
+def trace_for(wl: str, n=N_PAGES, t=T):
+    return workloads.make(wl, T=t, n=n)
+
+
+def run_policy(policy_name: str, trace, machine=PMEM_LARGE, k=K, seed=0):
+    t0 = time.time()
+    res = run(POLICIES[policy_name](), trace, machine, k, seed=seed)
+    wall = time.time() - t0
+    return res, wall
+
+
+def geomean(xs):
+    xs = np.asarray(xs, dtype=float)
+    return float(np.exp(np.log(np.maximum(xs, 1e-12)).mean()))

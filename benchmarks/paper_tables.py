@@ -1,0 +1,186 @@
+"""Benchmarks reproducing the paper's tables/figures (deliverable d).
+
+Each function reproduces one figure/table and emits CSV rows; the asserted
+claims are collected and reported at the end of run.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, geomean
+from repro.baselines.hemem import HeMemPolicy
+from repro.simulator import tuning
+from repro.simulator.engine import run
+from repro.simulator.machine import NUMA, PMEM_LARGE
+
+CLAIMS = []
+
+
+def claim(name, value, target, ok):
+    CLAIMS.append((name, value, target, bool(ok)))
+
+
+# ------------------------------------------------------ Fig. 2/3 + Table 2
+def bench_tuning_study(budget: int = 24):
+    """Tuned vs default HeMem per workload (paper: 1.05-2.09x gains)."""
+    gains = []
+    for wl in common.WORKLOAD_SET:
+        trace = common.trace_for(wl)
+        best_cfg, best_res, _rows = tuning.tune_hemem(
+            trace, PMEM_LARGE, common.K, budget=budget)
+        default, wall = common.run_policy("hemem", trace)
+        gain = default.exec_time_s / best_res.exec_time_s
+        gains.append(gain)
+        emit(f"tuning_study.{wl}", wall * 1e6,
+             f"tuned_gain={gain:.3f};best={best_cfg}")
+    claim("tuning helps (geomean default/tuned)", f"{geomean(gains):.2f}x",
+          ">=1.05x (paper: 1.05-2.09x per workload)", geomean(gains) >= 1.05)
+
+
+# ------------------------------------------------------------------ Fig. 7
+def bench_main_comparison():
+    """ARMS vs HeMem/tuned-HeMem/Memtis/TPP on pmem-large."""
+    vs_hemem, vs_memtis, vs_tpp, vs_tuned = [], [], [], []
+    for wl in common.WORKLOAD_SET:
+        trace = common.trace_for(wl)
+        res = {}
+        for pol in ("all-slow", "hemem", "memtis", "tpp", "arms"):
+            res[pol], wall = common.run_policy(pol, trace)
+        _cfg, tuned, _ = tuning.tune_hemem(trace, PMEM_LARGE, common.K,
+                                           budget=24)
+        a = res["arms"].exec_time_s
+        vs_hemem.append(res["hemem"].exec_time_s / a)
+        vs_memtis.append(res["memtis"].exec_time_s / a)
+        vs_tpp.append(res["tpp"].exec_time_s / a)
+        vs_tuned.append(tuned.exec_time_s / a)
+        emit(f"main_comparison.{wl}", wall * 1e6,
+             f"arms_vs_hemem={vs_hemem[-1]:.3f};"
+             f"arms_vs_memtis={vs_memtis[-1]:.3f};"
+             f"arms_vs_tpp={vs_tpp[-1]:.3f};"
+             f"arms_vs_tuned={vs_tuned[-1]:.3f}")
+    claim("ARMS vs default HeMem (geomean)", f"{geomean(vs_hemem):.2f}x",
+          "paper: 1.26x", geomean(vs_hemem) >= 1.2)
+    claim("ARMS vs Memtis (geomean)", f"{geomean(vs_memtis):.2f}x",
+          "paper: 1.34x", geomean(vs_memtis) >= 1.1)
+    claim("ARMS vs TPP (geomean)", f"{geomean(vs_tpp):.2f}x",
+          "paper: 2.3x", geomean(vs_tpp) >= 1.5)
+    claim("ARMS within 3% of tuned HeMem (geomean)",
+          f"{geomean(vs_tuned):.3f}", "paper: >=0.97",
+          geomean(vs_tuned) >= 0.97)
+
+
+# ----------------------------------------------------------------- Fig. 10
+def bench_migrations():
+    """Promotion counts + wasteful migrations per system."""
+    tot = {p: 0 for p in ("hemem", "memtis", "tpp", "arms")}
+    waste = dict(tot)
+    for wl in common.WORKLOAD_SET:
+        trace = common.trace_for(wl)
+        for pol in tot:
+            res, wall = common.run_policy(pol, trace)
+            tot[pol] += res.promotions
+            waste[pol] += res.wasteful
+        emit(f"migrations.{wl}", wall * 1e6,
+             ";".join(f"{p}={tot[p]}" for p in tot))
+    emit("migrations.wasteful_total", 0,
+         ";".join(f"{p}={waste[p]}" for p in waste))
+    claim("TPP migrates most (paper: 'extremely high')",
+          f"tpp={tot['tpp']}", f"> 2x arms={tot['arms']}",
+          tot["tpp"] > 2 * tot["arms"])
+    claim("ARMS wasteful migrations lowest among adaptive systems",
+          f"arms={waste['arms']}",
+          f"<= memtis={waste['memtis']}, tpp={waste['tpp']}",
+          waste["arms"] <= waste["memtis"]
+          and waste["arms"] <= waste["tpp"])
+
+
+# ------------------------------------------------------------------ Fig. 9
+def bench_adaptivity():
+    """PHT change-point detection timeline (btree hot-set shift)."""
+    trace = common.trace_for("btree")   # shuffles hot set at T/2
+    res, wall = common.run_policy("arms", trace)
+    mode = res.timeline_mode
+    shift = common.T // 2
+    detect = np.flatnonzero(mode[shift:] == 1)
+    latency = int(detect[0]) if len(detect) else -1
+    emit("adaptivity.btree", wall * 1e6,
+         f"detect_latency_intervals={latency};"
+         f"recency_intervals={int((mode == 1).sum())}")
+    claim("PHT detects hot-set change (Fig. 9)",
+          f"latency={latency} intervals", "< 25 intervals (2.5s)",
+          0 <= latency < 25)
+
+
+# ----------------------------------------------------------------- Fig. 13
+def bench_tier_ratios():
+    """ARMS vs default HeMem across fast:slow capacity ratios."""
+    wins = []
+    for wl in ("xsbench", "gups"):
+        trace = common.trace_for(wl)
+        for ratio in (16, 8, 4, 2):
+            k = common.N_PAGES // ratio
+            h, _ = common.run_policy("hemem", trace, k=k)
+            a, wall = common.run_policy("arms", trace, k=k)
+            sp = h.exec_time_s / a.exec_time_s
+            wins.append(sp)
+            emit(f"tier_ratios.{wl}.1to{ratio}", wall * 1e6,
+                 f"arms_vs_hemem={sp:.3f}")
+    claim("ARMS robust across tier ratios (Fig. 13)",
+          f"min={min(wins):.2f}x", ">= 0.95x at every ratio",
+          min(wins) >= 0.95)
+
+
+# ----------------------------------------------------------------- Fig. 12
+def bench_scaling():
+    """Thread-count analogue: workload intensity scaling (MLP factor)."""
+    import dataclasses
+    trace = common.trace_for("silo-ycsb")
+    for mlp in (16, 32, 64, 128):   # ~4..20 threads of MLP
+        m = dataclasses.replace(PMEM_LARGE, mlp=float(mlp))
+        h, _ = common.run_policy("hemem", trace, machine=m)
+        a, wall = common.run_policy("arms", trace, machine=m)
+        emit(f"scaling.mlp{mlp}", wall * 1e6,
+             f"arms_vs_hemem={h.exec_time_s / a.exec_time_s:.3f}")
+
+
+# ----------------------------------------------------------------- Fig. 11
+def bench_numa_machine():
+    """Different hardware (emulated-CXL NUMA node), no re-tuning."""
+    sp = []
+    for wl in ("gups", "btree", "silo-ycsb", "xsbench"):
+        trace = common.trace_for(wl)
+        h, _ = common.run_policy("hemem", trace, machine=NUMA)
+        a, wall = common.run_policy("arms", trace, machine=NUMA)
+        sp.append(h.exec_time_s / a.exec_time_s)
+        emit(f"numa.{wl}", wall * 1e6, f"arms_vs_hemem={sp[-1]:.3f}")
+    claim("ARMS wins on different hardware without re-tuning (Fig. 11)",
+          f"{geomean(sp):.2f}x", ">= 1.0x geomean", geomean(sp) >= 1.0)
+
+
+# --------------------------------------------------------- §5/§6 overheads
+def bench_overheads():
+    """ARMS controller cost per policy interval + metadata bytes/page."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ARMSConfig, arms_step, init_state
+
+    for n in (4096, 65536, 1 << 20):
+        cfg = ARMSConfig()
+        st = init_state(n, cfg)
+        counts = jnp.ones((n,))
+        st, _ = arms_step(st, counts, 0.5, 0.5, cfg=cfg, k=n // 8)  # compile
+        jax.block_until_ready(st.score)
+        t0 = time.time()
+        iters = 20
+        for _ in range(iters):
+            st, _ = arms_step(st, counts, 0.5, 0.5, cfg=cfg, k=n // 8)
+        jax.block_until_ready(st.score)
+        us = (time.time() - t0) / iters * 1e6
+        emit(f"overheads.controller.n{n}", us,
+             f"us_per_page={us / n:.4f}")
+    # metadata bytes/page: 2 EWMAs + 2 scores (f32) + hot_age (i32) + tier
+    emit("overheads.metadata", 0, "bytes_per_page=21 (paper: ~20)")

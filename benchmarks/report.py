@@ -1,0 +1,138 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run artifacts.  Usage:
+  PYTHONPATH=src:. python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["zamba2-1.2b", "mistral-nemo-12b", "stablelm-1.6b",
+              "qwen3-14b", "granite-8b", "llama4-scout-17b-16e",
+              "deepseek-v2-236b", "mamba2-370m", "whisper-small",
+              "llava-next-mistral-7b"]
+
+
+def load():
+    recs = {}
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_bytes(n):
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}EB"
+
+
+def dryrun_table(recs):
+    print("| arch | shape | 16x16 | 2x16x16 | compile(s) | "
+          "args/dev | temp/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r1 = recs.get((a, s, "16x16"))
+            r2 = recs.get((a, s, "2x16x16"))
+            if r1 is None:
+                continue
+            if r1["status"] == "skipped":
+                print(f"| {a} | {s} | skip | skip | — | — | — |"
+                      f"  <!-- {r1['reason']} -->")
+                continue
+            mem = r1.get("memory_analysis", {})
+            print(f"| {a} | {s} | ok | "
+                  f"{'ok' if r2 and r2['status'] == 'ok' else '—'} | "
+                  f"{r1.get('compile_s', 0)} | "
+                  f"{fmt_bytes(mem.get('argument_size_in_bytes', 0) / 256)} | "
+                  f"{fmt_bytes(mem.get('temp_size_in_bytes', 0) / 256)} |")
+
+
+def roofline_table(recs, mesh="16x16"):
+    print("| arch | shape | compute(s) | memory(s) | collective(s) | "
+          "dominant | MODEL/HLO flops | bound(s) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None or r["status"] != "ok":
+                continue
+            rf = r["roofline"]
+            useful = r.get("useful_flops_ratio") or 0
+            bound = max(rf["compute_s"], rf["memory_s"],
+                        rf["collective_s"])
+            print(f"| {a} | {s} | {rf['compute_s']:.3e} | "
+                  f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | "
+                  f"**{rf['dominant']}** | {useful:.3f} | {bound:.3e} |")
+
+
+def _advice(rec) -> str:
+    """One sentence on what would move the dominant term down (per cell)."""
+    dom = rec["roofline"]["dominant"]
+    shape, arch = rec["shape"], rec["arch"]
+    kind = ("train" if shape.startswith("train")
+            else "prefill" if shape.startswith("prefill") else "decode")
+    moe = "deepseek" in arch or "llama4" in arch
+    ssm = "mamba" in arch or "zamba" in arch
+    if dom == "compute":
+        return ("raise per-chip utilization: larger microbatch / fused "
+                "Pallas kernels keep the MXU fed")
+    if dom == "collective":
+        if kind == "train":
+            return ("reduce-scatter gradients + bf16/int8-EF compression on "
+                    "the pod axis (ft/compression) halves the all-reduce "
+                    "volume")
+        if moe:
+            return ("shard_map all-to-all MoE dispatch replaces the "
+                    "expert-buffer partial-sum all-reduce")
+        return ("shrink the TP degree for this model size, or replicate "
+                "small embedding tables (serve layout)")
+    # memory-dominant
+    if kind == "decode":
+        if ssm:
+            return ("state is already O(1); fuse the recurrent update "
+                    "(kernels/mamba_scan) to cut per-step round-trips")
+        return ("ARMS KV-page tiering + sparse paged attention serves only "
+                "the hot working set (tiering/sparse_attention: 0.4x pages "
+                "at 0.3% error)")
+    if kind == "prefill":
+        return ("Pallas flash/SSD kernels keep score tiles in VMEM; "
+                "xla_flash already applied — the rest is kernel headroom")
+    return ("remat policy tuning (checkpoint only matmul outputs) + flash "
+            "kernels remove the recompute-pass HBM traffic")
+
+
+def advice_section(recs, mesh="16x16"):
+    print("\n### Bottleneck advice (per cell, single-pod)\n")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None or r["status"] != "ok":
+                continue
+            print(f"- **{a} × {s}** ({r['roofline']['dominant']}-bound): "
+                  f"{_advice(r)}")
+
+
+def main():
+    recs = load()
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+    print(f"<!-- {len(recs)} artifacts: {n_ok} ok, {n_skip} skipped, "
+          f"{len(recs) - n_ok - n_skip} failed -->\n")
+    print("### Dry-run matrix\n")
+    dryrun_table(recs)
+    print("\n### Roofline (single-pod 16x16, 256 chips)\n")
+    roofline_table(recs, "16x16")
+    print("\n### Roofline (multi-pod 2x16x16, 512 chips)\n")
+    roofline_table(recs, "2x16x16")
+    advice_section(recs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark harness entry point (deliverable d).
+
+One function per paper table/figure (benchmarks/paper_tables.py) plus
+framework-layer benches (kernels, tiered serving, roofline summary).
+Prints ``name,us_per_call,derived`` CSV and a paper-claims validation
+report; exits non-zero if a reproduced claim fails.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the tuning study (slowest bench)")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import common, framework, paper_tables as pt
+    common.header()
+    if not args.quick:
+        pt.bench_tuning_study()
+    pt.bench_main_comparison()
+    pt.bench_migrations()
+    pt.bench_adaptivity()
+    pt.bench_tier_ratios()
+    pt.bench_scaling()
+    pt.bench_numa_machine()
+    pt.bench_overheads()
+    framework.bench_kernels()
+    framework.bench_tiered_serving()
+    framework.bench_sparse_serving()
+    framework.bench_roofline_summary()
+
+    print("\n=== paper-claim validation ===")
+    failed = 0
+    for name, value, target, ok in pt.CLAIMS:
+        status = "PASS" if ok else "FAIL"
+        if not ok:
+            failed += 1
+        print(f"[{status}] {name}: measured {value} (target {target})")
+    print(f"=== {len(pt.CLAIMS) - failed}/{len(pt.CLAIMS)} claims hold ===")
+    raise SystemExit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: the ARMS controller in ~40 lines.
+
+Drives the threshold-free tiering controller (paper Alg. 1+2, §4) with a
+synthetic workload whose hot set shifts halfway through, and prints how the
+controller detects the change (PHT -> recency mode) and re-populates the
+fast tier.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ARMSConfig, arms_step, init_state
+
+N_PAGES, FAST_CAPACITY = 512, 64
+cfg = ARMSConfig()
+state = init_state(N_PAGES, cfg)
+rng = np.random.default_rng(0)
+
+hot = np.arange(FAST_CAPACITY)                    # initial hot set
+for interval in range(40):
+    if interval == 20:                            # hot set SHIFTS
+        hot = np.arange(256, 256 + FAST_CAPACITY)
+
+    counts = np.zeros(N_PAGES)
+    counts[hot] = rng.poisson(30, FAST_CAPACITY)  # hot pages
+    counts += rng.poisson(0.3, N_PAGES)           # background noise
+
+    in_fast = np.asarray(state.in_fast)
+    slow_share = counts[~in_fast].sum() / max(counts.sum(), 1e-9)
+
+    state, plan = arms_step(state, jnp.asarray(counts),
+                            slow_bw_frac=float(slow_share),
+                            app_bw_frac=0.3, cfg=cfg, k=FAST_CAPACITY)
+
+    hot_resident = int(np.asarray(state.in_fast)[hot].sum())
+    print(f"t={interval:2d} mode={'RECENCY' if int(state.mode) else 'history'}"
+          f" migrated={int(plan.count):2d}"
+          f" hot-set residency={hot_resident}/{FAST_CAPACITY}")
+
+assert int(np.asarray(state.in_fast)[hot].sum()) == FAST_CAPACITY
+print("\nnew hot set fully promoted after the shift — no thresholds, "
+      "no tuning.")

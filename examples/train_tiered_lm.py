@@ -1,0 +1,24 @@
+"""End-to-end training driver (deliverable b): trains a reduced
+granite-8b-family model for a few hundred steps on CPU with the full
+substrate — synthetic zipf data pipeline with prefetch, AdamW, async
+checkpointing, preemption guard, straggler monitor — and verifies the loss
+goes down.
+
+Run:  PYTHONPATH=src python examples/train_tiered_lm.py [steps]
+"""
+import sys
+import tempfile
+
+from repro.launch.train import train
+
+steps = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    losses = train("granite-8b", n_steps=steps, batch=8, seq=128,
+                   ckpt_dir=ckpt_dir, ckpt_every=50)
+
+first, last = losses[0], sum(losses[-10:]) / 10
+print(f"\nloss {first:.3f} -> {last:.3f} over {steps} steps "
+      f"({(1 - last / first) * 100:.1f}% reduction)")
+assert last < first, "training should reduce the loss"
+print("ok")

@@ -1,0 +1,67 @@
+"""ARMS wrapped as a simulator policy (the paper's system, §4-5).
+
+Bridges the pure-JAX controller into the numpy simulation loop: accumulates
+sampled counts between policy invocations (500 ms / 100 ms cadence expressed
+in 100 ms simulator intervals), feeds slow-tier bandwidth to the PHT, and
+executes the bandwidth-aware batched migration plan.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines.base import Policy
+from repro.core import (ARMSConfig, arms_step, init_state, policy_every,
+                        sampling_period)
+from repro.core.scheduler import observe_migration_cost
+from repro.simulator import machine as machine_mod
+
+
+class ARMSPolicy(Policy):
+    name = "arms"
+
+    def __init__(self, cfg: ARMSConfig | None = None):
+        self.base_cfg = cfg or ARMSConfig()
+
+    @property
+    def migration_limit(self):  # batched migrations: up to BS_max per pass
+        return self.base_cfg.bs_max
+
+    def reset(self, n_pages, k, machine):
+        self.n, self.k = n_pages, k
+        self.cfg = self.base_cfg
+        self.state = init_state(n_pages, self.cfg)
+        self.buf = np.zeros(n_pages)
+        self.t = 0
+        self._machine = machine
+        self._promo_us = machine_mod.promo_page_us(machine)
+        self._demo_us = machine_mod.demo_page_us(machine)
+
+    def sampling_period(self):
+        return float(sampling_period(self.state.mode))
+
+    def step(self, observed, slow_bw_frac, app_bw_frac):
+        self.t += 1
+        self.buf += observed
+        every = int(policy_every(self.state.mode))
+        if self.t % every:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+
+        # normalize accumulated counts to per-interval rate so the EWMA scale
+        # is mode-independent (500ms vs 100ms policy cadence, §5).
+        self.state, plan = arms_step(
+            self.state, self.buf / every, float(slow_bw_frac),
+            float(app_bw_frac), cfg=self.cfg, k=self.k)
+        self.buf[:] = 0.0
+
+        valid = np.asarray(plan.valid)
+        promote = np.asarray(plan.promote)[valid]
+        demote = np.asarray(plan.demote)[valid]
+        demote = demote[demote >= 0]
+        if len(promote):   # §4.3: self-calibrating migration-cost feedback
+            self.state = observe_migration_cost(
+                self.state, self._promo_us, self._demo_us, self.cfg)
+        return promote.astype(np.int64), demote.astype(np.int64)
+
+    @property
+    def mode(self) -> int:
+        return int(self.state.mode)

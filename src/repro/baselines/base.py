@@ -1,0 +1,36 @@
+"""Policy protocol shared by ARMS and all baseline tiering engines.
+
+A policy sees only PEBS-sampled counts and bandwidth signals (never true
+access counts) and returns per-interval promotion/demotion page lists.  The
+simulator engine applies them, charges migration traffic, and scores the run.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Policy:
+    name: str = "base"
+    #: pages the engine will migrate for this policy in one interval; models
+    #: serial (kernel-thread) vs batched (Nimble/ARMS) migration mechanisms.
+    migration_limit: int = 10**9
+
+    def reset(self, n_pages: int, k: int, machine) -> None:
+        raise NotImplementedError
+
+    def sampling_period(self) -> float:
+        return 10_000.0
+
+    def step(self, observed: np.ndarray, slow_bw_frac: float,
+             app_bw_frac: float):
+        """-> (promote_idx: np.ndarray, demote_idx: np.ndarray)
+
+        ``promote`` are slow-tier pages to move fast (priority order);
+        ``demote`` are fast-tier pages to move slow.  The engine executes
+        demotions first, then promotions, capped by capacity and
+        ``migration_limit``.
+        """
+        raise NotImplementedError
+
+    def wants_true_counts(self) -> bool:
+        return False

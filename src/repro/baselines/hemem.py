@@ -1,0 +1,81 @@
+"""HeMem baseline (Raybuck et al., SOSP'21) — static-threshold tiering.
+
+Faithful simplifications of the behaviors the paper analyzes (§2-3):
+  * per-page sample counts accumulate until a COOLING event (any page count
+    reaching ``cooling_threshold`` halves all counts);
+  * a page is hot iff its count >= ``hot_threshold`` (static);
+  * a migration pass runs every ``migration_period`` intervals;
+  * migration is SERIAL and FIFO in hot-page *discovery* order -> newly very
+    hot pages suffer head-of-line blocking (paper §3.2 "Serial migration");
+  * cold pages are demoted only to make room (no free-page pool).
+
+The tunable knobs exposed here are the ones the paper's tuning study sweeps.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines.base import Policy
+
+# Default knob values from the HeMem implementation (paper §2/§3.1).
+DEFAULTS = dict(hot_threshold=8.0, cooling_threshold=18.0,
+                migration_period=5, sample_period=10_000.0)
+
+
+class HeMemPolicy(Policy):
+    name = "hemem"
+    migration_limit = 12   # serial migration: ~120 pages/s at 100ms intervals
+
+    def __init__(self, hot_threshold=None, cooling_threshold=None,
+                 migration_period=None, sample_period=None):
+        self.hot_threshold = DEFAULTS["hot_threshold"] \
+            if hot_threshold is None else float(hot_threshold)
+        self.cooling_threshold = DEFAULTS["cooling_threshold"] \
+            if cooling_threshold is None else float(cooling_threshold)
+        self.migration_period = DEFAULTS["migration_period"] \
+            if migration_period is None else int(migration_period)
+        self._sample_period = DEFAULTS["sample_period"] \
+            if sample_period is None else float(sample_period)
+
+    def reset(self, n_pages, k, machine):
+        self.n, self.k = n_pages, k
+        self.counts = np.zeros(n_pages)
+        self.in_fast = np.zeros(n_pages, bool)
+        self.first_hot = np.full(n_pages, np.inf)  # FIFO discovery order
+        self.t = 0
+        self.cooling_events = 0
+
+    def sampling_period(self):
+        return self._sample_period
+
+    def step(self, observed, slow_bw_frac, app_bw_frac):
+        self.t += 1
+        self.counts += observed
+        # cooling: triggered when any page reaches the cooling threshold.
+        if self.counts.max() >= self.cooling_threshold:
+            self.counts *= 0.5
+            self.cooling_events += 1
+
+        hot = self.counts >= self.hot_threshold
+        newly_hot = hot & np.isinf(self.first_hot)
+        self.first_hot[newly_hot] = self.t
+        self.first_hot[~hot] = np.inf
+
+        if self.t % self.migration_period:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+
+        want = np.flatnonzero(hot & ~self.in_fast)
+        want = want[np.argsort(self.first_hot[want], kind="stable")]  # FIFO
+        want = want[: self.migration_limit]
+
+        free = self.k - int(self.in_fast.sum())
+        need_victims = max(0, len(want) - free)
+        cold_in_fast = np.flatnonzero(self.in_fast & ~hot)
+        victims = cold_in_fast[np.argsort(self.counts[cold_in_fast],
+                                          kind="stable")][:need_victims]
+        # without enough cold victims, promotions stall (paper §3.2
+        # "Inaccurate cooling threshold" -> zero cold pages in DRAM).
+        want = want[: free + len(victims)]
+        self.in_fast[victims] = False
+        self.in_fast[want] = True
+        return want, victims

@@ -1,0 +1,65 @@
+"""Memtis baseline (Lee et al., SOSP'23) — dynamic hot threshold, static
+cooling period.
+
+Memtis removes HeMem's hot_threshold by picking, each adaptation interval,
+the smallest count threshold whose hot set fits the fast tier (histogram
+based).  It keeps STATIC knobs for everything else; the one the paper blames
+(§7.1 "infrequent cooling") is the cooling period of 2M PEBS samples, which
+at a 1/10k sampling rate spans tens to hundreds of seconds — far longer than
+hot-set churn in TPC-C-like ("latest") workloads.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines.base import Policy
+
+
+class MemtisPolicy(Policy):
+    name = "memtis"
+    migration_limit = 12   # kernel kmigrated-style serial migration
+
+    def __init__(self, cooling_period_samples: float = 2e6,
+                 adaptation_period: int = 10):
+        self.cooling_period_samples = float(cooling_period_samples)
+        self.adaptation_period = int(adaptation_period)
+
+    def reset(self, n_pages, k, machine):
+        self.n, self.k = n_pages, k
+        self.counts = np.zeros(n_pages)
+        self.in_fast = np.zeros(n_pages, bool)
+        self.samples_seen = 0.0
+        self.t = 0
+        self.hot_threshold = 1.0
+        self.cooling_events = 0
+
+    def step(self, observed, slow_bw_frac, app_bw_frac):
+        self.t += 1
+        self.counts += observed
+        self.samples_seen += float(observed.sum())
+        # static-period cooling (the pathology the paper highlights).
+        if self.samples_seen >= self.cooling_period_samples:
+            self.counts *= 0.5
+            self.samples_seen = 0.0
+            self.cooling_events += 1
+
+        if self.t % self.adaptation_period == 0:
+            # histogram-based threshold: smallest thr with |hot| <= k.
+            order = np.sort(self.counts)[::-1]
+            thr = order[self.k - 1] if self.k <= len(order) else 0.0
+            self.hot_threshold = max(thr, 1.0)
+
+        hot = self.counts >= self.hot_threshold
+        want = np.flatnonzero(hot & ~self.in_fast)
+        want = want[np.argsort(self.counts[want])[::-1]]
+        want = want[: self.migration_limit]
+
+        free = self.k - int(self.in_fast.sum())
+        need_victims = max(0, len(want) - free)
+        cold_in_fast = np.flatnonzero(self.in_fast & ~hot)
+        victims = cold_in_fast[np.argsort(self.counts[cold_in_fast],
+                                          kind="stable")][:need_victims]
+        want = want[: free + len(victims)]
+        self.in_fast[victims] = False
+        self.in_fast[want] = True
+        return want, victims

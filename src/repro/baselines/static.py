@@ -1,0 +1,41 @@
+"""Static placements: the all-slow baseline (paper Fig. 1 normalization) and
+an oracle upper bound (true-count top-k, instant migration)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines.base import Policy
+
+
+class AllSlowPolicy(Policy):
+    name = "all-slow"
+
+    def reset(self, n_pages, k, machine):
+        pass
+
+    def step(self, observed, slow_bw_frac, app_bw_frac):
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+
+
+class OraclePolicy(Policy):
+    """Sees TRUE access counts and rebalances instantly — an upper bound on
+    any sampling-based policy (migration traffic still charged)."""
+
+    name = "oracle"
+    migration_limit = 10**9
+
+    def reset(self, n_pages, k, machine):
+        self.n, self.k = n_pages, k
+        self.in_fast = np.zeros(n_pages, bool)
+
+    def wants_true_counts(self):
+        return True
+
+    def step(self, observed, slow_bw_frac, app_bw_frac):
+        order = np.argsort(observed)[::-1]
+        target = np.zeros(self.n, bool)
+        target[order[: self.k]] = True
+        promote = np.flatnonzero(target & ~self.in_fast)
+        demote = np.flatnonzero(~target & self.in_fast)[: len(promote)]
+        self.in_fast = target
+        return promote, demote

@@ -1,0 +1,65 @@
+"""Threshold-free hot/cold page classification (paper §4.1, Algorithm 1).
+
+Score update
+------------
+Two EWMAs per page.  NOTE on faithfulness: Algorithm 1 as printed updates
+``EWMA = alpha*EWMA + (1-alpha)*accesses`` which, with alpha_s=0.7 and
+alpha_l=0.1, would make the *long-term* average the more reactive one —
+contradicting the paper's prose ("short-term, fast-moving EWMA_s (alpha_s =
+0.7)", 1s vs 10s horizons).  We implement the prose semantics
+
+    EWMA <- alpha * accesses + (1 - alpha) * EWMA
+
+so alpha_s=0.7 reacts fast and alpha_l=0.1 tracks the long horizon.  See
+DESIGN.md §1 "Formula note".
+
+Classification
+--------------
+Pages are *ranked* by score and the top-k (k = fast-tier capacity in pages)
+form the hot set — no hotness threshold, no cooling (EWMA decay subsumes it).
+``hot_age`` counts consecutive intervals a page stayed in the top-k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import (MODE_RECENCY, ARMSConfig, TieringState)
+
+
+def score_weights(cfg: ARMSConfig, mode):
+    """(w_s, w_l) given mode; recency mode prioritizes the short-term EWMA."""
+    recency = (mode == MODE_RECENCY)
+    w_s = jnp.where(recency, cfg.w_s_recency, cfg.w_s_history)
+    w_l = jnp.where(recency, cfg.w_l_recency, cfg.w_l_history)
+    return w_s, w_l
+
+
+def update_scores(state: TieringState, access_counts, cfg: ARMSConfig,
+                  mode) -> TieringState:
+    """Algorithm 1 lines 1-6: EWMA + hotness score update (vectorized)."""
+    x = jnp.asarray(access_counts, jnp.float32)
+    ewma_s = cfg.alpha_s * x + (1.0 - cfg.alpha_s) * state.ewma_s
+    ewma_l = cfg.alpha_l * x + (1.0 - cfg.alpha_l) * state.ewma_l
+    w_s, w_l = score_weights(cfg, mode)
+    score = w_s * ewma_s + w_l * ewma_l
+    return state.replace(ewma_s=ewma_s, ewma_l=ewma_l,
+                         prev_score=state.score, score=score)
+
+
+def topk_hot_mask(score: jnp.ndarray, k: int):
+    """Boolean mask of the top-k pages by score (Algorithm 1 lines 7-9).
+
+    Ties are broken by page index (stable) via jax.lax.top_k semantics.
+    """
+    n = score.shape[0]
+    k = min(int(k), n)
+    _, idx = jax.lax.top_k(score, k)
+    mask = jnp.zeros((n,), bool).at[idx].set(True)
+    return mask, idx
+
+
+def update_hot_age(state: TieringState, hot_mask) -> TieringState:
+    """Algorithm 1 lines 10-12."""
+    hot_age = jnp.where(hot_mask, state.hot_age + 1, 0)
+    return state.replace(hot_age=hot_age)

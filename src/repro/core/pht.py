@@ -1,0 +1,38 @@
+"""Page-Hinkley change-point test (paper §4.2).
+
+Sequential detection of an *increase* in the monitored signal (slow-tier
+bandwidth utilization, normalized to [0,1] by BW_max).  Classic PHT for
+increase detection:
+
+    m_t   = m_{t-1} + (x_t - mean_t - delta)
+    PH_t  = m_t - min_{i<=t} m_i
+    alarm = PH_t > lambda
+
+On alarm the test resets so a sustained shift produces one alarm, not a
+continuous stream.  All ops are jax-traceable.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.state import ARMSConfig, PHTState, init_pht
+
+
+def pht_update(state: PHTState, x, cfg: ARMSConfig):
+    """One PHT step. Returns (new_state, alarm: bool scalar, stat: f32)."""
+    x = jnp.asarray(x, jnp.float32)
+    n = state.n + 1
+    mean = state.mean + (x - state.mean) / n.astype(jnp.float32)
+    m_t = state.m_t + (x - mean - cfg.pht_delta)
+    m_min = jnp.minimum(state.m_min, m_t)
+    stat = m_t - m_min
+    alarm = stat > cfg.pht_lambda
+
+    fresh = init_pht()
+    new = PHTState(
+        n=jnp.where(alarm, fresh.n, n),
+        mean=jnp.where(alarm, fresh.mean, mean),
+        m_t=jnp.where(alarm, fresh.m_t, m_t),
+        m_min=jnp.where(alarm, fresh.m_min, m_min),
+    )
+    return new, alarm, stat

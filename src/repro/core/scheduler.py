@@ -1,0 +1,61 @@
+"""Bandwidth-aware batched migration scheduling (paper §4.4).
+
+Priority: candidates arrive hottest-first (from classifier top-k order), so
+the hottest page is migrated first — no head-of-line blocking (contrast with
+HeMem's serial FIFO queue, §3.2).
+
+Batch size adapts to application bandwidth headroom (Nimble-style batching,
+throttled so migrations never steal bandwidth from the application):
+
+    BS = max(1, (BW_max - BW_app) / BW_max * BS_max)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.state import ARMSConfig, MigrationPlan, TieringState
+
+
+def batch_size(bw_app, bw_max, bs_max: int):
+    """The paper's BS formula; clamped to [1, bs_max]."""
+    frac = jnp.clip((bw_max - bw_app) / bw_max, 0.0, 1.0)
+    bs = jnp.floor(frac * bs_max).astype(jnp.int32)
+    return jnp.clip(bs, 1, bs_max)
+
+
+def build_plan(cand_idx, promote_ok, demote_idx, bw_app, bw_max,
+               cfg: ARMSConfig) -> MigrationPlan:
+    """Truncate the gated, priority-ordered candidate batch to BS entries."""
+    bs = batch_size(jnp.asarray(bw_app, jnp.float32),
+                    jnp.asarray(bw_max, jnp.float32),
+                    min(cfg.bs_max, cand_idx.shape[0]))
+    # Rank accepted candidates by arrival (= hotness) order.
+    rank = jnp.cumsum(promote_ok.astype(jnp.int32)) - 1
+    valid = promote_ok & (rank < bs)
+    count = valid.sum().astype(jnp.int32)
+    return MigrationPlan(
+        promote=jnp.where(valid, cand_idx, -1),
+        demote=jnp.where(valid, demote_idx, -1),
+        valid=valid,
+        count=count,
+        batch_size=bs,
+    )
+
+
+def apply_plan(state: TieringState, plan: MigrationPlan) -> TieringState:
+    """Update tier residency; the data plane executes the same plan."""
+    n = state.in_fast.shape[0]
+    promote = jnp.where(plan.valid, plan.promote, n)   # out-of-range = drop
+    demote = jnp.where(plan.valid & (plan.demote >= 0), plan.demote, n)
+    in_fast = state.in_fast.at[demote].set(False, mode="drop")
+    in_fast = in_fast.at[promote].set(True, mode="drop")
+    return state.replace(in_fast=in_fast)
+
+
+def observe_migration_cost(state: TieringState, promo_us, demo_us,
+                           cfg: ARMSConfig) -> TieringState:
+    """Feed back measured per-page migration latencies (self-calibration)."""
+    a = cfg.migrate_cost_alpha
+    promo = a * jnp.asarray(promo_us, jnp.float32) + (1 - a) * state.promo_cost
+    demo = a * jnp.asarray(demo_us, jnp.float32) + (1 - a) * state.demo_cost
+    return state.replace(promo_cost=promo, demo_cost=demo)

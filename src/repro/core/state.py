@@ -1,0 +1,140 @@
+"""ARMS tiering state (paper §4, §5).
+
+Per-page metadata mirrors the paper's ~20 bytes/page layout: raw access count
+for the current interval arrives as an input; we persist two EWMAs, the current
+and previous hotness scores, the hot age, and tier residency.  Controller-level
+state holds the Page-Hinkley test (§4.2), the history/recency mode, and the
+EWMA-estimated migration costs used by the cost/benefit gate (§4.3).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.utils.pytree import pytree_dataclass, static_dataclass
+
+MODE_HISTORY = 0
+MODE_RECENCY = 1
+
+
+@static_dataclass
+class ARMSConfig:
+    """ARMS internal parameters (paper §6 "ARMS internal knobs").
+
+    These are NOT per-workload tuning thresholds; the paper reports workloads
+    are insensitive to them and we keep the published values.
+    """
+
+    alpha_s: float = 0.7        # short-term EWMA smoothing (fast; ~1s horizon)
+    alpha_l: float = 0.1        # long-term EWMA smoothing (slow; ~10s horizon)
+    w_s_history: float = 0.2    # score weights in history (steady) mode
+    w_l_history: float = 0.8
+    w_s_recency: float = 0.8    # score weights in recency mode (§4.2)
+    w_l_recency: float = 0.2
+    hot_age_min: int = 2        # multi-round promotion filter (§4.3)
+    # Page-Hinkley test on normalized slow-tier bandwidth (§4.2).
+    pht_delta: float = 0.005    # magnitude tolerance
+    pht_lambda: float = 0.10    # alarm threshold
+    recency_ttl: int = 20       # intervals to stay in recency mode after alarm
+    # §4.2: "stays in this mode ... until the bandwidth utilization has
+    # stabilized" — the TTL only counts down while the slow-tier signal is no
+    # longer rising (its short EWMA within eps of its long EWMA).
+    stabilize_eps: float = 0.02
+    # Migration scheduler (§4.4).
+    bs_max: int = 64            # max pages migrated per interval (BS_max)
+    # Cost model (§4.3): latencies in microseconds (per page).
+    latency_fast_us: float = 0.08   # 80 ns -> per-access; used as relative ΔL
+    latency_slow_us: float = 0.25
+    # Accesses represented by one observed count (PEBS 1-in-10,000 sampling,
+    # §4.1).  Converts score (sampled accesses/interval) into real accesses so
+    # benefit and cost share units (us).  Framework integrations with exact
+    # counts use access_scale=1 and per-page costs in the same unit system.
+    access_scale: float = 10_000.0
+    # z-score of the Poisson noise floor subtracted from the promotion
+    # benefit (§4.3 sampling-noise immunity).  Sensitivity is flat in
+    # [0, 0.5] (see EXPERIMENTS.md §Claims); this is an internal constant
+    # like alpha_s/alpha_l, not a per-workload knob.
+    noise_z: float = 0.25
+    migrate_cost_alpha: float = 0.3  # EWMA for observed migration latencies
+    init_promo_cost_us: float = 50.0  # prior for a 2MB-page-equivalent move
+    init_demo_cost_us: float = 50.0
+
+    @property
+    def delta_latency(self) -> float:
+        return self.latency_slow_us - self.latency_fast_us
+
+
+@pytree_dataclass
+class PHTState:
+    """Page-Hinkley test running state (increase detection)."""
+
+    n: jnp.ndarray          # i32 sample count
+    mean: jnp.ndarray       # f32 running mean of signal
+    m_t: jnp.ndarray        # f32 cumulative deviation
+    m_min: jnp.ndarray      # f32 running min of m_t
+
+
+@pytree_dataclass
+class TieringState:
+    """Full ARMS state; all leaves are jax arrays (jit/scan friendly)."""
+
+    # --- per-page arrays [n_pages] ---
+    ewma_s: jnp.ndarray     # f32
+    ewma_l: jnp.ndarray     # f32
+    score: jnp.ndarray      # f32
+    prev_score: jnp.ndarray  # f32
+    hot_age: jnp.ndarray    # i32, consecutive intervals in top-k
+    in_fast: jnp.ndarray    # bool, tier residency (True = fast tier)
+    # --- controller scalars ---
+    mode: jnp.ndarray       # i32, MODE_HISTORY / MODE_RECENCY
+    mode_ttl: jnp.ndarray   # i32, remaining recency intervals
+    interval: jnp.ndarray   # i32, policy interval counter
+    sig_ewma_s: jnp.ndarray  # f32, short EWMA of the slow-tier signal
+    sig_ewma_l: jnp.ndarray  # f32, long EWMA of the slow-tier signal
+    promo_cost: jnp.ndarray  # f32 EWMA of observed per-page promotion cost (us)
+    demo_cost: jnp.ndarray   # f32 EWMA of observed per-page demotion cost (us)
+    pht: PHTState
+
+
+def init_pht() -> PHTState:
+    z = jnp.zeros((), jnp.float32)
+    return PHTState(n=jnp.zeros((), jnp.int32), mean=z, m_t=z, m_min=z)
+
+
+def init_state(n_pages: int, cfg: ARMSConfig, in_fast=None) -> TieringState:
+    f = jnp.zeros((n_pages,), jnp.float32)
+    if in_fast is None:
+        in_fast = jnp.zeros((n_pages,), bool)
+    return TieringState(
+        ewma_s=f,
+        ewma_l=f,
+        score=f,
+        prev_score=f,
+        hot_age=jnp.zeros((n_pages,), jnp.int32),
+        in_fast=in_fast,
+        mode=jnp.asarray(MODE_HISTORY, jnp.int32),
+        mode_ttl=jnp.zeros((), jnp.int32),
+        interval=jnp.zeros((), jnp.int32),
+        sig_ewma_s=jnp.zeros((), jnp.float32),
+        sig_ewma_l=jnp.zeros((), jnp.float32),
+        promo_cost=jnp.asarray(cfg.init_promo_cost_us, jnp.float32),
+        demo_cost=jnp.asarray(cfg.init_demo_cost_us, jnp.float32),
+        pht=init_pht(),
+    )
+
+
+@pytree_dataclass
+class MigrationPlan:
+    """Fixed-shape migration plan emitted once per policy interval (§4.4).
+
+    ``promote[i]`` / ``demote[i]`` pair the i-th hottest accepted candidate
+    with its victim; ``demote[i] == -1`` means a free fast-tier slot was used.
+    Only entries with ``valid[i]`` are executed; ``count = sum(valid)``.
+    Entries are sorted hottest-first (priority scheduling — no head-of-line
+    blocking), and ``count`` never exceeds the bandwidth-aware batch size BS.
+    """
+
+    promote: jnp.ndarray   # i32 [bs_max]
+    demote: jnp.ndarray    # i32 [bs_max]
+    valid: jnp.ndarray     # bool [bs_max]
+    count: jnp.ndarray     # i32 scalar
+    batch_size: jnp.ndarray  # i32 scalar, the BS the scheduler allowed

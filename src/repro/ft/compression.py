@@ -1,0 +1,46 @@
+"""Gradient compression for cross-pod reduction with error feedback.
+
+At 512+ chips the pod-level all-reduce crosses the (slow) inter-pod links;
+compressing the pod-crossing traffic 2x (bf16) or 4x (int8 + per-tensor
+scale) with error-feedback keeps convergence intact (the EF residual
+carries the quantization error into the next step)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+def init_error_feedback(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_like)
+
+
+def compress_int8(grads, ef):
+    """-> (q_grads int8, scales f32, new_ef).  g' = g + ef; q = round(g'/s);
+    ef' = g' - q*s."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        s = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / s), -127, 127).astype(jnp.int8)
+        new_e = g - q.astype(jnp.float32) * s
+        return q, s, new_e
+
+    flat, treedef = jax.tree.flatten(grads)
+    ef_flat = jax.tree.leaves(ef)
+    qs, ss, es = zip(*[one(g, e) for g, e in zip(flat, ef_flat)])
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, ss),
+            jax.tree.unflatten(treedef, es))
+
+
+def decompress_int8(q_grads, scales):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, q_grads,
+                        scales)

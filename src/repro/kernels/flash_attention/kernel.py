@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: tiled causal flash attention (prefill/training fwd).
+
+Grid: (B, KV, Sq/bq, Sk/bk) with the key axis innermost so the online
+softmax carry (m, l, acc in VMEM scratch) is reused across key tiles.
+Causal tiles entirely above the diagonal are skipped via pl.when, giving
+the ~2x triangular saving.  Block sizes default to (128, 128) -> MXU-aligned
+(dh is 64 or 128 in all assigned configs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bq: int, bk: int, scale: float, causal: bool, window: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1   # tile intersects causal region
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0].astype(jnp.float32)        # [bq*rep? no: bq, dh]
+        k = k_ref[0, :, 0].astype(jnp.float32)        # [bk, dh]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask &= kj <= qi
+        if window:
+            mask &= kj > qi - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, :, 0] = (acc_ref[...]
+                          / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = True):
+    """Single-query-head-per-KV variant: q [B,S,H,dh] with H == KV * rep is
+    folded so each grid cell handles one (batch, q-head) row block."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+
+    # fold rep into batch of query heads: grid over (B*rep, KV, ...)
+    qh = q.reshape(B, S, KV, rep, dh).transpose(0, 3, 1, 2, 4) \
+        .reshape(B * rep, S, KV, dh)
+
+    grid = (B * rep, KV, S // bq, S // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, scale=dh ** -0.5,
+                          causal=causal, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda b, h, iq, ik: (b // rep, ik, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda b, h, iq, ik: (b // rep, ik, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B * rep, S, KV, dh), q.dtype),
+        interpret=interpret,
+    )(qh, k, v)
+    out = out.reshape(B, rep, S, KV, dh).transpose(0, 2, 3, 1, 4)
+    return out.reshape(B, S, H, dh)

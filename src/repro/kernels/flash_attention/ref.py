@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for causal (optionally windowed) GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B,S,H,dh], k/v: [B,S,KV,dh] -> [B,S,H,dh]."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, S, KV, rep, dh)
+    s = jnp.einsum("bqkrd,bskd->bkrqs", qg, k).astype(jnp.float32)
+    s *= dh ** -0.5
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", p, v)
+    return out.reshape(B, S, H, dh)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused SSD (Mamba2) chunked scan.
+
+Delegates to the model's chunked implementation (itself validated against
+the naive recurrence in tests/test_models_smoke.py / test_kernels.py)."""
+from __future__ import annotations
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def mamba_scan_ref(x, dt, A, Bm, Cm, chunk: int):
+    """x: [B,S,H,P], dt: [B,S,H] (post-softplus), A: [H] (negative),
+    Bm/Cm: [B,S,N] -> (y [B,S,H,P], final_state [B,H,P,N])."""
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: batched page migration (gather/scatter by table).
+
+This is the data plane of the paper's §4.4 batched migration mechanism: one
+grid step per migration entry; the scalar-prefetched (src, dst, valid)
+tables drive the BlockSpec index maps, so each step DMAs one page from the
+source pool tile into the destination pool tile.  Invalid entries are
+routed to a scratch page (index 0 read, self-write) and masked by writing
+the existing destination content back.
+
+``input_output_aliases`` makes the destination update in place — a batch of
+BS migrations is one kernel launch, the TPU analogue of Nimble's
+multi-threaded batched copies.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(src_idx_ref, dst_idx_ref, valid_ref, src_ref, dst_in_ref,
+            dst_out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(valid_ref[i])
+    def _copy():
+        dst_out_ref[...] = src_ref[...]
+
+    @pl.when(jnp.logical_not(valid_ref[i]))
+    def _keep():
+        dst_out_ref[...] = dst_in_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def migrate_kernel(src_pool, dst_pool, src_idx, dst_idx, valid,
+                   *, interpret: bool = True):
+    M = src_idx.shape[0]
+    _, page, feat = src_pool.shape
+
+    def src_map(i, src, dst, val):
+        return (src[i], 0, 0)
+
+    def dst_map(i, src, dst, val):
+        # invalid entries read+write destination slot dst[i] anyway (no-op
+        # copy of existing content); index stays in range via the engine.
+        return (dst[i], 0, 0)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(M,),
+            in_specs=[
+                pl.BlockSpec((1, page, feat), src_map),
+                pl.BlockSpec((1, page, feat), dst_map),
+            ],
+            out_specs=pl.BlockSpec((1, page, feat), dst_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct(dst_pool.shape, dst_pool.dtype),
+        input_output_aliases={4: 0},   # dst_pool (4th operand) -> output
+        interpret=interpret,
+    )(src_idx, dst_idx, valid, src_pool, dst_pool)
+    return out

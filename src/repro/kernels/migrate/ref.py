@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the batched page-migration engine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def migrate_ref(src_pool, dst_pool, src_idx, dst_idx, valid):
+    """Copy src_pool[src_idx[i]] -> dst_pool[dst_idx[i]] where valid[i].
+
+    src_pool: [Ps, page, feat]; dst_pool: [Pd, page, feat];
+    src_idx/dst_idx: [M] i32; valid: [M] bool.  Invalid entries are no-ops.
+    Returns the updated dst_pool.
+    """
+    Pd = dst_pool.shape[0]
+    pages = src_pool[src_idx]                       # [M, page, feat]
+    # route invalid writes to a scratch row index Pd (dropped)
+    tgt = jnp.where(valid, dst_idx, Pd)
+    return dst_pool.at[tgt].set(pages, mode="drop")

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: paged decode attention (flash-decoding style).
+
+Grid: (B, KV, pages_per_seq) — innermost axis walks a sequence's pages in
+order; the page id for each step comes from the scalar-prefetched block
+table, so the BlockSpec index_map DMAs exactly the page the sequence needs
+(HBM -> VMEM), which is what makes an ARMS-tiered page pool work: pages are
+physical tiles, attention never touches pages outside the table.
+
+Online softmax state (running max / denom / accumulator) lives in VMEM
+scratch and is carried across the page-walk; the output block is written on
+the last page step.
+
+VMEM budget per step: one KV page (page x dh), the [rep, dh] query block and
+the f32 accumulator — tile sizes are chosen so page*dh and rep*dh are
+multiples of the (8,128) TPU tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page: int, scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    n_pp = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [rep, dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)         # [page, dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * scale                                   # [rep, page]
+    token_pos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(token_pos < lens_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]                             # [rep, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                          # [rep, page]
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(i == n_pp - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_kernel(q, k_pages, v_pages, block_tables, seq_lens,
+                           *, interpret: bool = True):
+    """See ref.paged_attention_ref for semantics. q: [B, H, dh]."""
+    B, H, dh = q.shape
+    P, page, KV, _ = k_pages.shape
+    rep = H // KV
+    n_pp = block_tables.shape[1]
+    qg = q.reshape(B, KV, rep, dh)
+
+    grid = (B, KV, n_pp)
+
+    def q_map(b, h, i, tables, lens):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, i, tables, lens):
+        return (tables[b, i], 0, h, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, page=page, scale=dh ** -0.5),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, rep, dh), q_map),
+                pl.BlockSpec((1, page, 1, dh), kv_map),
+                pl.BlockSpec((1, page, 1, dh), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rep, dh), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((rep, 1), jnp.float32),   # running max
+                pltpu.VMEM((rep, 1), jnp.float32),   # running denom
+                pltpu.VMEM((rep, dh), jnp.float32),  # accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, rep, dh), q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, qg, k_pages, v_pages)
+    return out.reshape(B, H, dh)

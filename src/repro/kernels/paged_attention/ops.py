@@ -1,0 +1,22 @@
+"""jit'd public wrapper for paged decode attention.
+
+On TPU the Pallas kernel runs compiled; elsewhere (this CPU container) it
+runs in interpret mode, which executes the same kernel body in Python for
+bit-level validation against ref.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                    *, use_kernel: bool = True):
+    if not use_kernel:
+        return paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                   seq_lens)
+    interpret = jax.default_backend() != "tpu"
+    return paged_attention_kernel(q, k_pages, v_pages, block_tables,
+                                  seq_lens, interpret=interpret)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens):
+    """Decode attention over a paged KV cache.
+
+    q:            [B, H, dh]           one query token per sequence
+    k_pages:      [P, page, KV, dh]    global page pool
+    v_pages:      [P, page, KV, dh]
+    block_tables: [B, pages_per_seq]   page ids per sequence (i32)
+    seq_lens:     [B]                  valid tokens per sequence (i32)
+    -> [B, H, dh]
+    """
+    B, H, dh = q.shape
+    page = k_pages.shape[1]
+    KV = k_pages.shape[2]
+    rep = H // KV
+    n_pp = block_tables.shape[1]
+
+    k = k_pages[block_tables]                # [B, n_pp, page, KV, dh]
+    v = v_pages[block_tables]
+    k = k.reshape(B, n_pp * page, KV, dh)
+    v = v.reshape(B, n_pp * page, KV, dh)
+
+    qg = q.reshape(B, KV, rep, dh)
+    scores = jnp.einsum("bkrd,bskd->bkrs", qg, k).astype(jnp.float32)
+    scores *= dh ** -0.5
+    valid = jnp.arange(n_pp * page)[None] < seq_lens[:, None]   # [B, S]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrs,bskd->bkrd", probs, v)
+    return out.reshape(B, H, dh)

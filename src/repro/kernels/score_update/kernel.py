@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: fused dual-EWMA + hotness-score update.
+
+At framework scale the ARMS controller tracks millions of pages (KV pages
+across layers x sequences); this fuses the three elementwise passes of
+Alg. 1 into one VMEM-resident sweep (one read of each EWMA + the counts,
+one write of each output) — memory-bound, so fusion is the whole win.
+Tiles are (8, 512) f32 over a 2-D folded view of the page array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS, COLS = 8, 512
+
+
+def _kernel(s_ref, l_ref, c_ref, s_out, l_out, score_out,
+            *, alpha_s, alpha_l, w_s, w_l):
+    c = c_ref[...]
+    s = alpha_s * c + (1 - alpha_s) * s_ref[...]
+    ll = alpha_l * c + (1 - alpha_l) * l_ref[...]
+    s_out[...] = s
+    l_out[...] = ll
+    score_out[...] = w_s * s + w_l * ll
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha_s", "alpha_l", "w_s", "w_l",
+                                    "interpret"))
+def score_update_kernel(ewma_s, ewma_l, counts, *, alpha_s, alpha_l, w_s,
+                        w_l, interpret: bool = True):
+    n = ewma_s.shape[0]
+    tile = ROWS * COLS
+    n_pad = -(-n // tile) * tile
+    pad = n_pad - n
+
+    def fold(x):
+        return jnp.pad(x, (0, pad)).reshape(n_pad // COLS, COLS)
+
+    grid = (n_pad // tile,)
+    spec = pl.BlockSpec((ROWS, COLS), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_kernel, alpha_s=alpha_s, alpha_l=alpha_l,
+                          w_s=w_s, w_l=w_l),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n_pad // COLS, COLS), jnp.float32)
+                   for _ in range(3)],
+        interpret=interpret,
+    )(fold(ewma_s), fold(ewma_l), fold(counts))
+    return tuple(o.reshape(n_pad)[:n] for o in outs)

@@ -1,0 +1,18 @@
+"""jit'd public wrapper for the fused ARMS score update."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.score_update.kernel import score_update_kernel
+from repro.kernels.score_update.ref import score_update_ref
+
+
+def score_update(ewma_s, ewma_l, counts, *, alpha_s, alpha_l, w_s, w_l,
+                 use_kernel: bool = True):
+    if not use_kernel:
+        return score_update_ref(ewma_s, ewma_l, counts, alpha_s=alpha_s,
+                                alpha_l=alpha_l, w_s=w_s, w_l=w_l)
+    interpret = jax.default_backend() != "tpu"
+    return score_update_kernel(ewma_s, ewma_l, counts, alpha_s=alpha_s,
+                               alpha_l=alpha_l, w_s=w_s, w_l=w_l,
+                               interpret=interpret)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused ARMS score update (Alg. 1 lines 1-6)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def score_update_ref(ewma_s, ewma_l, counts, *, alpha_s, alpha_l, w_s, w_l):
+    s = alpha_s * counts + (1 - alpha_s) * ewma_s
+    l = alpha_l * counts + (1 - alpha_l) * ewma_l
+    return s, l, w_s * s + w_l * l

@@ -1,0 +1,30 @@
+"""Production mesh construction (deliverable e, step 1).
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS for 512 host devices
+before any jax import; tests and benches see the single real device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Elastic variant: any shape whose product divides the device count."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel axes = every axis that isn't 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

@@ -1,0 +1,145 @@
+"""Sharding rules: params (TP over 'model' + FSDP over 'data'), inputs
+(DP over 'pod'x'data'), KV caches (batch over DP axes, sequence over
+'model' when head counts don't tile it).
+
+Rules are name-based (Megatron layout where the name identifies the role)
+with a divisibility-checked generic fallback, so every architecture lowers
+with zero per-arch special cases; the hillclimb (§Perf) then tightens the
+three chosen cells.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import axis_size, dp_axes
+
+# param names whose FIRST matmul dim is the contracting/model dim
+_ROW_PARALLEL = {"wo", "out_proj"}
+
+
+def _divisible(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _leaf_spec(path, shape, mesh) -> P:
+    names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    msize = axis_size(mesh, "model")
+    dsize = axis_size(mesh, "data")
+    nd = len(shape)
+
+    # embeddings: [V, D] vocab over model, d_model over data
+    if "table" in names:
+        lead = nd - 2
+        v_ok = _divisible(shape[lead], msize)
+        d_ok = _divisible(shape[lead + 1], dsize)
+        return P(*([None] * lead), "model" if v_ok else None,
+                 "data" if d_ok else None)
+
+    if nd == 0 or nd == 1:
+        return P()
+
+    # stacked-layer leading axes (scan dims) stay unsharded
+    lead = nd - 2
+    a, b = shape[-2], shape[-1]
+
+    # MoE expert stacks [*, E, D, F] / [*, E, F, D]: experts over model (EP)
+    if nd >= 3 and names and names[-1] in ("wi", "wo") and "moe" in names:
+        lead = nd - 3
+        e = shape[lead]
+        e_spec = "model" if _divisible(e, msize) else None
+        a_spec = "data" if _divisible(a, dsize) else None
+        return P(*([None] * lead), e_spec, a_spec, None)
+
+    row = any(n in _ROW_PARALLEL for n in names[-2:])
+    if row:  # [contracting(model), out(data)]
+        return P(*([None] * lead),
+                 "model" if _divisible(a, msize) else None,
+                 "data" if _divisible(b, dsize) else None)
+    return P(*([None] * lead),
+             "data" if _divisible(a, dsize) else None,
+             "model" if _divisible(b, msize) else None)
+
+
+def param_shardings(params_shapes, mesh, serve: bool = False):
+    """Pytree of NamedSharding matching a params (or grads/opt-state) tree
+    of ShapeDtypeStructs.
+
+    ``serve=True`` drops the FSDP ('data') factor: at decode batch sizes,
+    re-gathering weight shards every step costs more than the memory the
+    sharding saves — weights stay TP('model')-sharded and replicated
+    across data-parallel serving replicas (§Perf iteration B2)."""
+    def spec(path, leaf):
+        p = _leaf_spec(path, leaf.shape, mesh)
+        if serve:
+            p = PartitionSpec(*(None if e == "data" else e for e in p))
+        return NamedSharding(mesh, p)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shapes)
+
+
+def batch_sharding(mesh, batch_shapes):
+    """Token batches: leading (global batch) dim over all DP axes."""
+    dp = dp_axes(mesh)
+
+    def spec(leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        total = 1
+        for a in dp:
+            total *= axis_size(mesh, a)
+        first = dp if leaf.ndim and _divisible(b, total) else None
+        rest = [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(first, *rest))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def cache_sharding(mesh, cache_shapes, seq_axis_hint: int = -3):
+    """KV/state caches: batch dim over DP axes when divisible; the sequence
+    dim over 'model' when divisible (flash-decoding style split); head dims
+    over 'model' only when batch could not be sharded AND heads divide.
+
+    Cache layouts handled: [L?, B, S, KV, dh] (KV), [L?, B, S, R] (MLA
+    latent), [L?, B, K-1, C] / [L?, B, H, P, N] (mamba)."""
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= axis_size(mesh, a)
+    msize = axis_size(mesh, "model")
+
+    def spec(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        entries = [None] * nd
+        # batch dim: stacked cache layouts ([L, B, ...], ndim >= 4) carry
+        # the batch at dim 1; unstacked ([B, ...]) at dim 0.  Never shard
+        # the layer-stack dim — a layer-scan over a layer-sharded cache
+        # degenerates into per-layer collective-permutes (§Perf B1).
+        cand = 1 if nd >= 4 else 0
+        b_at = cand if (_divisible(shape[cand], dp_total)
+                        and shape[cand] >= dp_total) else None
+        if b_at is not None:
+            entries[b_at] = dp
+        # sequence dim: the largest remaining dim divisible by model size
+        s_at, s_val = None, 0
+        for i in range(nd):
+            if i == b_at:
+                continue
+            if _divisible(shape[i], msize) and shape[i] > s_val \
+                    and shape[i] >= msize:
+                s_at, s_val = i, shape[i]
+        if s_at is not None:
+            if b_at is None and _divisible(shape[s_at], dp_total * msize):
+                # batch unshardable (e.g. long_500k B=1): context-parallel
+                # split of the sequence over EVERY axis.
+                entries[s_at] = dp + ("model",)
+            else:
+                entries[s_at] = "model"
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(spec, cache_shapes)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

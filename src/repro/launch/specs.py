@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every model input (deliverable e, step 2).
+
+Weak-type-correct, shardable, no device allocation: the dry-run lowers
+against these.  Stub-frontend archs get precomputed frame/patch embeddings
+per the assignment ("the modality frontend is a STUB").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import model as M
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg, shape, with_labels: bool = True):
+    """Training / prefill batch ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    dtype = L.dtype_of(cfg)
+    spec = {}
+    if cfg.family == "vlm":
+        spec["tokens"] = SDS((B, S - cfg.n_patches), jnp.int32)
+        spec["patch_embeds"] = SDS((B, cfg.n_patches, cfg.d_model), dtype)
+        if with_labels:
+            spec["labels"] = SDS((B, S - cfg.n_patches), jnp.int32)
+    elif cfg.family == "encdec":
+        spec["tokens"] = SDS((B, S), jnp.int32)
+        spec["audio_embeds"] = SDS((B, cfg.enc_seq, cfg.d_model), dtype)
+        if with_labels:
+            spec["labels"] = SDS((B, S), jnp.int32)
+    else:
+        spec["tokens"] = SDS((B, S), jnp.int32)
+        if with_labels:
+            spec["labels"] = SDS((B, S), jnp.int32)
+    return spec
+
+
+def decode_specs(cfg, shape):
+    """(token, cache, pos) ShapeDtypeStructs for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+    token = SDS((B, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return token, cache, pos
+
+
+def param_specs(cfg, rng_seed: int = 0):
+    return jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(rng_seed), cfg))
+
+
+def opt_specs(cfg, opt_cfg, params_sds):
+    from repro.optim import adamw
+    return jax.eval_shape(lambda p: adamw.init(p, opt_cfg), params_sds)
+
+
+def input_specs(cfg, shape):
+    """All inputs for the step function of this (arch x shape) cell."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_labels=False)}
+    token, cache, pos = decode_specs(cfg, shape)
+    return {"token": token, "cache": cache, "pos": pos}

@@ -1,0 +1,106 @@
+"""Step factories: train (grad-accumulation + AdamW), prefill, serve.
+
+These are the functions the dry-run lowers and the launchers execute.
+Gradient accumulation is a lax.scan over microbatches — bounding live
+activation memory and letting XLA overlap the per-microbatch reduce
+collectives with the next microbatch's compute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def make_activation_constraint(mesh):
+    """Per-layer activation sharding pin: batch over the DP axes.
+
+    Without this, SPMD propagation loses the batch sharding inside deep
+    scans (observed: every device processing the FULL batch through
+    attention — §Perf iteration A5) and silently replicates activations.
+    """
+    if mesh is None:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import dp_axes
+    dp = dp_axes(mesh)
+
+    def constrain(x):
+        spec = P(dp, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, grad_accum: int = 1,
+                    remat: bool = True, mesh=None):
+    """-> train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  batch leading dim must be divisible by grad_accum."""
+    from repro.utils import act_sharding
+    constrain = make_activation_constraint(mesh)
+
+    def micro_loss(params, micro):
+        with act_sharding.use_mesh(mesh):
+            return M.loss_fn(params, micro, cfg, remat=remat,
+                             constrain=constrain)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(micro_loss)(params, batch)
+        else:
+            micros = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, micro):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(micro_loss)(params, micro)
+                grad_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zero),
+                                            micros)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+
+        params, opt_state, metrics = adamw.update(grads, opt_state, params,
+                                                  opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, mesh=None):
+    from repro.utils import act_sharding
+    constrain = make_activation_constraint(mesh)
+
+    def prefill_step(params, batch):
+        with act_sharding.use_mesh(mesh):
+            logits, _ = M.forward(params, batch, cfg, constrain=constrain)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg, greedy: bool = True):
+    """One decode step: embeds, L-layer stack against the KV/state cache,
+    unembed, greedy next-token."""
+
+    def serve_step(params, token, cache, pos):
+        logits, cache = M.decode_step(params, token, cache, pos, cfg)
+        if greedy:  # [B,1] so the output feeds the next step's input
+            nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            return nxt, cache
+        return logits, cache
+
+    return serve_step

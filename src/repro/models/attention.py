@@ -1,0 +1,380 @@
+"""Attention variants: GQA (with qk-norm, partial RoPE, sliding window) and
+MLA (DeepSeek-V2 multi-head latent attention with weight absorption for the
+decode path).
+
+All functions support three call modes:
+  * full-sequence (train / prefill): returns per-layer KV to cache;
+  * decode: single new token against a fixed-size KV cache + position;
+  * cross (whisper decoder): keys/values from precomputed encoder states.
+
+Softmax is computed in f32.  Masks are built from positions so decode
+lowers with static shapes (required by the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ helpers
+def _sdpa(q, k, v, mask, scale):
+    """q:[B,Sq,H,dh] k/v:[B,Sk,KV,dh] mask:[B,1,Sq,Sk] bool (True=keep)."""
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, dh)
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qg, k).astype(jnp.float32)
+    scores = scores * scale
+    scores = jnp.where(mask[:, :, None], scores, NEG_INF)  # [B,KV,rep,Sq,Sk]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v)
+    return out.reshape(B, Sq, H, dh)
+
+
+def causal_mask(sq: int, sk: int, q_offset, window: int = 0):
+    """[1,1,sq,sk] boolean; q position i attends to j <= i (+window)."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    if window:
+        m &= kj > qi - window
+    return m[None, None]
+
+
+def length_mask(sk: int, valid_len):
+    kj = jnp.arange(sk)[None, :]
+    return (kj < valid_len)[:, None, None, :] if jnp.ndim(valid_len) \
+        else (kj < valid_len)[None, None, None, :]
+
+
+# ---------------------------------------------------------------------- GQA
+def gqa_init(rng, cfg, dtype) -> dict:
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    r = jax.random.split(rng, 4)
+    p = {"wq": L.linear_init(r[0], D, H * dh, dtype),
+         "wk": L.linear_init(r[1], D, KV * dh, dtype),
+         "wv": L.linear_init(r[2], D, KV * dh, dtype),
+         "wo": L.linear_init(r[3], H * dh, D, dtype, scale=0.5)}
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(dh, dtype)
+        p["k_norm"] = L.rmsnorm_init(dh, dtype)
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCache:
+    """Contiguous KV cache [B, S_max, KV, dh] (paged variant in tiering/)."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(KVCache, data_fields=["k", "v"],
+                                 meta_fields=[])
+
+
+def gqa_qkv(p, x, positions, cfg, *, rope: bool = True):
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.linear(p["wq"], x).reshape(B, S, H, dh)
+    k = L.linear(p["wk"], x).reshape(B, S, KV, dh)
+    v = L.linear(p["wv"], x).reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+        k = L.apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+    return q, k, v
+
+
+def gqa_full(p, x, cfg, *, causal: bool = True, rope: bool = True,
+             window: int = 0):
+    """Train/prefill: full-sequence attention.  Returns (out, KVCache).
+
+    Long sequences take the online-softmax KV-block path (xla_flash) — the
+    S x S score matrix is never materialized (§Perf iteration A4)."""
+    from repro.models import xla_flash
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, k, v = gqa_qkv(p, x, positions, cfg, rope=rope)
+    if xla_flash.use_flash(S):
+        H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        rep = H // KV
+        qh = q.reshape(B, S, KV, rep, dh).transpose(0, 2, 3, 1, 4) \
+            .reshape(B, KV * rep, S, dh)
+        kh = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+        vh = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+        out = xla_flash.flash_sdpa(qh, kh, vh, dh ** -0.5, causal=causal,
+                                   window=window)
+        out = out.reshape(B, KV, rep, S, dh).transpose(0, 3, 1, 2, 4) \
+            .reshape(B, S, -1)
+    else:
+        if causal:
+            mask = jnp.broadcast_to(causal_mask(S, S, 0, window),
+                                    (B, 1, S, S))
+        else:
+            mask = jnp.ones((B, 1, S, S), bool)
+        out = _sdpa(q, k, v, mask, cfg.head_dim ** -0.5)
+        out = out.reshape(B, S, -1)
+    out = L.linear(p["wo"], out)
+    return out, KVCache(k=k, v=v)
+
+
+def gqa_decode(p, x, cache: KVCache, pos, cfg, *, rope: bool = True,
+               window: int = 0):
+    """One-token decode against a cache of static size S_max.
+
+    x: [B, 1, D]; pos: scalar int32 (tokens already generated).
+    If ``window`` is set and the cache is window-sized, the cache is a RING
+    BUFFER over the last ``window`` positions (RoPE is baked into K at write
+    time, so slot order is irrelevant to the attention scores).
+    Returns (out [B,1,D], updated cache).
+    """
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k_new, v_new = gqa_qkv(p, x, positions, cfg, rope=rope)
+    S_max = cache.k.shape[1]
+    ring = bool(window) and S_max <= window
+    slot = pos % S_max if ring else pos
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    kj = jnp.arange(S_max)[None, None, None, :]
+    if ring:
+        mask = kj <= pos        # all slots once the ring has wrapped
+    else:
+        mask = kj <= pos
+        if window:
+            mask &= kj > pos - window
+    mask = jnp.broadcast_to(mask, (B, 1, 1, S_max))
+    out = _sdpa(q, k, v, mask, cfg.head_dim ** -0.5)
+    out = L.linear(p["wo"], out.reshape(B, 1, -1))
+    return out, KVCache(k=k, v=v)
+
+
+def gqa_cross(p, x, enc_kv: KVCache, cfg):
+    """Cross-attention (whisper decoder): q from x, kv precomputed."""
+    B, S, _ = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    q = L.linear(p["wq"], x).reshape(B, S, H, dh)
+    Sk = enc_kv.k.shape[1]
+    mask = jnp.ones((B, 1, S, Sk), bool)
+    out = _sdpa(q, enc_kv.k, enc_kv.v, mask, dh ** -0.5)
+    return L.linear(p["wo"], out.reshape(B, S, -1))
+
+
+def gqa_decode_flat(p, x, k_st, v_st, idx, pos, cfg, *, window: int = 0):
+    """One-token decode writing directly into the STACKED cache.
+
+    k_st/v_st: [L, B, KV, S, dh] — KV-major, sequence-inner layout (no
+    transpose before the attention dots) with token writes as [1,B,KV,1,dh]
+    dynamic-update-slices (in-place on TPU).  See EXPERIMENTS.md §Perf
+    iteration C2.  Returns (out, k_st, v_st).
+    """
+    B = x.shape[0]
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k_new, v_new = gqa_qkv(p, x, positions, cfg)     # [B,1,H/KV,dh]
+    S_max = k_st.shape[3]
+    ring = bool(window) and S_max <= window
+    slot = pos % S_max if ring else pos
+
+    upd_k = k_new.transpose(0, 2, 1, 3)[None]           # [1,B,KV,1,dh]
+    upd_v = v_new.transpose(0, 2, 1, 3)[None]
+    k_st = jax.lax.dynamic_update_slice(k_st, upd_k, (idx, 0, 0, slot, 0))
+    v_st = jax.lax.dynamic_update_slice(v_st, upd_v, (idx, 0, 0, slot, 0))
+
+    k_l = jax.lax.dynamic_index_in_dim(k_st, idx, 0, keepdims=False)
+    v_l = jax.lax.dynamic_index_in_dim(v_st, idx, 0, keepdims=False)
+    # barrier: keep downstream dtype converts (CPU f32 dot policy) on the
+    # per-layer slice — without it XLA hoists the convert onto the whole
+    # stacked cache (§Perf iteration C2 vs C3).
+    k_l, v_l = jax.lax.optimization_barrier((k_l, v_l))
+
+    H = cfg.n_heads
+    rep = H // KV
+    qg = q.reshape(B, KV, rep, dh)
+    s = jnp.einsum("bkrd,bksd->bkrs", qg, k_l).astype(jnp.float32)
+    s = s * (dh ** -0.5)
+    kj = jnp.arange(S_max)[None, None, None, :]
+    mask = kj <= pos
+    if window and not ring:
+        mask &= kj > pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    pgates = jax.nn.softmax(s, axis=-1).astype(v_l.dtype)
+    out = jnp.einsum("bkrs,bksd->bkrd", pgates, v_l)
+    out = L.linear(p["wo"], out.reshape(B, 1, H * dh))
+    return out, k_st, v_st
+
+
+def mla_decode_flat(p, x, c_st, r_st, idx, pos, cfg):
+    """MLA decode with weight absorption against stacked latent caches.
+
+    c_st: [L, B, S, R]; r_st: [L, B, S, rope_d].  Token writes are
+    [1,B,1,*] in-place updates.  Returns (out, c_st, r_st)."""
+    B = x.shape[0]
+    H, nope, rope_d, vd = (cfg.n_heads, cfg.head_dim, cfg.rope_head_dim,
+                           cfg.v_head_dim)
+    R = cfg.kv_lora_rank
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    c_new, kr_new = _mla_kv_a(p, x, positions, cfg)
+    c_st = jax.lax.dynamic_update_slice(c_st, c_new[None],
+                                        (idx, 0, pos, 0))
+    r_st = jax.lax.dynamic_update_slice(r_st, kr_new[None],
+                                        (idx, 0, pos, 0))
+    c_kv = jax.lax.dynamic_index_in_dim(c_st, idx, 0, keepdims=False)
+    k_rope = jax.lax.dynamic_index_in_dim(r_st, idx, 0, keepdims=False)
+
+    wkv_b = p["wkv_b"]["w"].reshape(R, H, nope + vd)
+    w_k, w_v = wkv_b[..., :nope], wkv_b[..., nope:]
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_k)
+    scale = (nope + rope_d) ** -0.5
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope))
+    scores = scores.astype(jnp.float32) * scale
+    S_max = c_kv.shape[1]
+    mask = (jnp.arange(S_max)[None, None, None, :] <= pos)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv)
+    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, w_v)
+    out = L.linear(p["wo"], out.reshape(B, 1, -1))
+    return out, c_st, r_st
+
+
+# ---------------------------------------------------------------------- MLA
+def mla_init(rng, cfg, dtype) -> dict:
+    """DeepSeek-V2 multi-head latent attention (kv_lora compression)."""
+    D, H = cfg.d_model, cfg.n_heads
+    nope, rope_d, vd = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r = jax.random.split(rng, 6)
+    p = {
+        "wkv_a": L.linear_init(r[0], D, cfg.kv_lora_rank + rope_d, dtype),
+        "kv_norm": L.rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wkv_b": L.linear_init(r[1], cfg.kv_lora_rank, H * (nope + vd),
+                               dtype),
+        "wo": L.linear_init(r[2], H * vd, D, dtype, scale=0.5),
+    }
+    if cfg.q_lora_rank:
+        p["wq_a"] = L.linear_init(r[3], D, cfg.q_lora_rank, dtype)
+        p["q_norm"] = L.rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["wq_b"] = L.linear_init(r[4], cfg.q_lora_rank, H * (nope + rope_d),
+                                  dtype)
+    else:
+        p["wq"] = L.linear_init(r[5], D, H * (nope + rope_d), dtype)
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class MLACache:
+    """Latent cache: compressed c_kv [B,S,kv_lora] + shared k_rope
+    [B,S,rope_d] — the memory win that makes MLA pages cheap to tier."""
+    c_kv: jnp.ndarray
+    k_rope: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(MLACache, data_fields=["c_kv", "k_rope"],
+                                 meta_fields=[])
+
+
+def _mla_q(p, x, positions, cfg):
+    B, S, _ = x.shape
+    H, nope, rope_d = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        q = L.linear(p["wq_b"], L.rmsnorm(p["q_norm"],
+                                          L.linear(p["wq_a"], x),
+                                          cfg.norm_eps))
+    else:
+        q = L.linear(p["wq"], x)
+    q = q.reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_a(p, x, positions, cfg):
+    B, S, _ = x.shape
+    kv = L.linear(p["wkv_a"], x)
+    c_kv = L.rmsnorm(p["kv_norm"], kv[..., : cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank:][:, :, None, :]   # one shared head
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_full(p, x, cfg, *, causal: bool = True):
+    """Train/prefill path: materialize per-head K/V from the latent.
+
+    The nope and rope score contributions are fused into ONE [B,H,S,S]
+    matmul by concatenating the head dims — two separate score tensors
+    doubled the softmax chain's HBM reads (§Perf iteration A2)."""
+    B, S, _ = x.shape
+    H, nope, rope_d, vd = (cfg.n_heads, cfg.head_dim, cfg.rope_head_dim,
+                           cfg.v_head_dim)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    c_kv, k_rope = _mla_kv_a(p, x, positions, cfg)
+    kvb = L.linear(p["wkv_b"], c_kv).reshape(B, S, H, nope + vd)
+    k_nope, v = kvb[..., :nope], kvb[..., nope:]
+
+    scale = (nope + rope_d) ** -0.5
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)   # [B,S,H,nope+rd]
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, rope_d))], axis=-1)
+    from repro.models import xla_flash
+    if xla_flash.use_flash(S):
+        out = xla_flash.flash_sdpa(
+            q_cat.transpose(0, 2, 1, 3), k_cat.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), scale, causal=causal)
+        out = out.transpose(0, 2, 1, 3)                  # [B,S,H,vd]
+    else:
+        scores = jnp.einsum("bqhd,bshd->bhqs", q_cat, k_cat)
+        scores = scores.astype(jnp.float32) * scale
+        if causal:
+            mask = causal_mask(S, S, 0)[0]
+            scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    out = L.linear(p["wo"], out.reshape(B, S, -1))
+    return out, MLACache(c_kv=c_kv, k_rope=k_rope)
+
+
+def mla_decode(p, x, cache: MLACache, pos, cfg):
+    """Decode with WEIGHT ABSORPTION: queries/attention run in the latent
+    space so the 32k/500k cache is only kv_lora(+rope) wide per token."""
+    B = x.shape[0]
+    H, nope, rope_d, vd = (cfg.n_heads, cfg.head_dim, cfg.rope_head_dim,
+                           cfg.v_head_dim)
+    R = cfg.kv_lora_rank
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)           # [B,1,H,*]
+    c_new, kr_new = _mla_kv_a(p, x, positions, cfg)
+    c_kv = jax.lax.dynamic_update_slice(cache.c_kv, c_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache.k_rope, kr_new, (0, pos, 0))
+
+    wkv_b = p["wkv_b"]["w"].reshape(R, H, nope + vd)
+    w_k = wkv_b[..., :nope]                                  # [R,H,nope]
+    w_v = wkv_b[..., nope:]                                  # [R,H,vd]
+    # absorb: q' = q_nope @ w_k^T  -> latent-space query [B,1,H,R]
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_k)
+    scale = (nope + rope_d) ** -0.5
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope))
+    scores = scores.astype(jnp.float32) * scale
+    S_max = c_kv.shape[1]
+    mask = (jnp.arange(S_max)[None, None, None, :] <= pos)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv)      # [B,1,H,R]
+    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, w_v)         # [B,1,H,vd]
+    out = L.linear(p["wo"], out.reshape(B, 1, -1))
+    return out, MLACache(c_kv=c_kv, k_rope=k_rope)

@@ -1,0 +1,206 @@
+"""Transformer / SSM block definitions (pre-norm residual).
+
+Each block family exposes ``<fam>_init(rng, cfg, dtype)`` and apply
+functions for full-sequence and decode modes.  Blocks are scanned over
+stacked parameters (leading layer axis) by models/model.py, so every apply
+is shape-stable and side-effect-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MoE
+
+
+# ------------------------------------------------------------- dense (GQA)
+def dense_block_init(rng, cfg, dtype, d_ff=None):
+    r = jax.random.split(rng, 2)
+    return {"ln1": L.rmsnorm_init(cfg.d_model, dtype),
+            "attn": A.gqa_init(r[0], cfg, dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": L.swiglu_init(r[1], cfg.d_model, d_ff or cfg.d_ff, dtype)}
+
+
+def dense_block_full(p, x, cfg, *, causal=True, window=0):
+    h, kv = A.gqa_full(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                       causal=causal, window=window)
+    x = x + h
+    x = x + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, kv
+
+
+def dense_block_decode_flat(p, x, k_st, v_st, idx, pos, cfg, *, window=0):
+    """Decode against the stacked [L,B,KV,S,dh] cache (in-place writes)."""
+    h, k_st, v_st = A.gqa_decode_flat(
+        p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), k_st, v_st, idx,
+        pos, cfg, window=window)
+    x = x + h
+    x = x + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, k_st, v_st
+
+
+def moe_block_decode_flat(p, x, caches, idx, pos, cfg, *, window=0):
+    xn = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        c_st, r_st = caches
+        h, c_st, r_st = A.mla_decode_flat(p["attn"], xn, c_st, r_st, idx,
+                                          pos, cfg)
+        caches = (c_st, r_st)
+    else:
+        k_st, v_st = caches
+        h, k_st, v_st = A.gqa_decode_flat(p["attn"], xn, k_st, v_st, idx,
+                                          pos, cfg, window=window)
+        caches = (k_st, v_st)
+    x = x + h
+    y, _, load = MoE.moe_apply(p["moe"],
+                               L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x + y, caches, load
+
+
+def dense_block_decode(p, x, cache, pos, cfg, *, window=0):
+    h, cache = A.gqa_decode(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                            cache, pos, cfg, window=window)
+    x = x + h
+    x = x + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, cache
+
+
+# ---------------------------------------------------------------- MoE block
+def moe_block_init(rng, cfg, dtype):
+    r = jax.random.split(rng, 2)
+    attn = (A.mla_init(r[0], cfg, dtype) if cfg.use_mla
+            else A.gqa_init(r[0], cfg, dtype))
+    return {"ln1": L.rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn,
+            "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+            "moe": MoE.moe_init(r[1], cfg, dtype)}
+
+
+def moe_block_full(p, x, cfg, *, window=0):
+    xn = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        h, kv = A.mla_full(p["attn"], xn, cfg)
+    else:
+        h, kv = A.gqa_full(p["attn"], xn, cfg, window=window)
+    x = x + h
+    y, aux, load = MoE.moe_apply(p["moe"],
+                                 L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x + y, kv, aux, load
+
+
+def moe_block_decode(p, x, cache, pos, cfg, *, window=0):
+    xn = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        h, cache = A.mla_decode(p["attn"], xn, cache, pos, cfg)
+    else:
+        h, cache = A.gqa_decode(p["attn"], xn, cache, pos, cfg,
+                                window=window)
+    x = x + h
+    y, _, load = MoE.moe_apply(p["moe"],
+                               L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x + y, cache, load
+
+
+# ------------------------------------------------------ MLA + dense (deepseek layer 0)
+def mla_dense_block_init(rng, cfg, dtype):
+    r = jax.random.split(rng, 2)
+    return {"ln1": L.rmsnorm_init(cfg.d_model, dtype),
+            "attn": A.mla_init(r[0], cfg, dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": L.swiglu_init(r[1], cfg.d_model, cfg.dense_d_ff, dtype)}
+
+
+def mla_dense_block_full(p, x, cfg):
+    h, kv = A.mla_full(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg)
+    x = x + h
+    x = x + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, kv
+
+
+def mla_dense_block_decode(p, x, cache, pos, cfg):
+    h, cache = A.mla_decode(p["attn"],
+                            L.rmsnorm(p["ln1"], x, cfg.norm_eps), cache,
+                            pos, cfg)
+    x = x + h
+    x = x + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, cache
+
+
+# -------------------------------------------------------------- mamba block
+def mamba_block_init(rng, cfg, dtype):
+    return {"ln": L.rmsnorm_init(cfg.d_model, dtype),
+            "mamba": M.mamba2_init(rng, cfg, dtype)}
+
+
+def mamba_block_full(p, x, cfg):
+    h, cache = M.mamba2_full(p["mamba"], L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                             cfg)
+    return x + h, cache
+
+
+def mamba_block_decode(p, x, cache, cfg):
+    h, cache = M.mamba2_decode(p["mamba"],
+                               L.rmsnorm(p["ln"], x, cfg.norm_eps), cache,
+                               cfg)
+    return x + h, cache
+
+
+# ------------------------------------------------- enc-dec blocks (whisper)
+def encoder_block_init(rng, cfg, dtype):
+    r = jax.random.split(rng, 2)
+    return {"ln1": L.rmsnorm_init(cfg.d_model, dtype),
+            "attn": A.gqa_init(r[0], cfg, dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": L.gelu_mlp_init(r[1], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def encoder_block_full(p, x, cfg):
+    h, _ = A.gqa_full(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                      causal=False, rope=False)
+    x = x + h
+    return x + L.gelu_mlp(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+
+
+def decoder_block_init(rng, cfg, dtype):
+    r = jax.random.split(rng, 3)
+    return {"ln1": L.rmsnorm_init(cfg.d_model, dtype),
+            "self_attn": A.gqa_init(r[0], cfg, dtype),
+            "ln_x": L.rmsnorm_init(cfg.d_model, dtype),
+            "cross_attn": A.gqa_init(r[1], cfg, dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": L.gelu_mlp_init(r[2], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def cross_kv(p, enc_out, cfg):
+    """Precompute per-layer cross K/V from encoder output."""
+    B, S, _ = enc_out.shape
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    k = L.linear(p["cross_attn"]["wk"], enc_out).reshape(B, S, KV, dh)
+    v = L.linear(p["cross_attn"]["wv"], enc_out).reshape(B, S, KV, dh)
+    return A.KVCache(k=k, v=v)
+
+
+def decoder_block_full(p, x, enc_kv: A.KVCache, cfg):
+    h, self_kv = A.gqa_full(p["self_attn"],
+                            L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                            causal=True, rope=False)
+    x = x + h
+    x = x + A.gqa_cross(p["cross_attn"],
+                        L.rmsnorm(p["ln_x"], x, cfg.norm_eps), enc_kv, cfg)
+    return x + L.gelu_mlp(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps)), \
+        self_kv
+
+
+def decoder_block_decode(p, x, self_cache, enc_kv, pos, cfg):
+    h, self_cache = A.gqa_decode(
+        p["self_attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), self_cache,
+        pos, cfg, rope=False)
+    x = x + h
+    x = x + A.gqa_cross(p["cross_attn"],
+                        L.rmsnorm(p["ln_x"], x, cfg.norm_eps), enc_kv, cfg)
+    return x + L.gelu_mlp(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps)), \
+        self_cache

@@ -1,0 +1,127 @@
+"""Core neural layers (pure functions over explicit param pytrees).
+
+Everything is jit/scan/vmap-friendly: params are nested dicts of arrays,
+forward functions are pure.  Matmuls run in the config dtype (bf16 on TPU);
+normalization statistics and softmax run in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def dtype_of(cfg):
+    return DTYPES[cfg.dtype]
+
+
+# ------------------------------------------------------------------ RMSNorm
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- Linear
+def linear_init(rng, d_in: int, d_out: int, dtype, scale: float = 1.0) -> dict:
+    std = scale / (d_in ** 0.5)
+    return {"w": (jax.random.normal(rng, (d_in, d_out), jnp.float32)
+                  * std).astype(dtype)}
+
+
+def linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"]
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float, pct: float = 1.0):
+    """Frequencies for (partially) rotary embeddings."""
+    rot = int(head_dim * pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               pct: float = 1.0) -> jnp.ndarray:
+    """x: [B, S, H, hd]; positions: [B, S] (int)."""
+    inv, rot = rope_freqs(x.shape[-1], theta, pct)
+    ang = positions[..., None].astype(jnp.float32) * inv  # [B,S,rot/2]
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    out = out.reshape(x.shape[:-1] + (rot,))
+    return jnp.concatenate([out.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+# ------------------------------------------------------------------- SwiGLU
+def swiglu_init(rng, d: int, f: int, dtype) -> dict:
+    r1, r2 = jax.random.split(rng)
+    return {"wi": linear_init(r1, d, 2 * f, dtype),
+            "wo": linear_init(r2, f, d, dtype)}
+
+
+def swiglu(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    gate_up = linear(p["wi"], x)
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    return linear(p["wo"], jax.nn.silu(gate) * up)
+
+
+# ------------------------------------------------------------- GELU MLP
+def gelu_mlp_init(rng, d: int, f: int, dtype) -> dict:
+    r1, r2 = jax.random.split(rng)
+    return {"wi": linear_init(r1, d, f, dtype),
+            "wo": linear_init(r2, f, d, dtype)}
+
+
+def gelu_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(p["wo"], jax.nn.gelu(linear(p["wi"], x)))
+
+
+# -------------------------------------------------------------- Embeddings
+def embedding_init(rng, vocab: int, d: int, dtype) -> dict:
+    return {"table": (jax.random.normal(rng, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(p: dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["table"].T
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000 ** (dim / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))  # d is even for all our configs
+    return pe
+
+
+def sinusoidal_at(pos, d: int) -> jnp.ndarray:
+    """Sinusoidal embedding for one (traced) position -> [d]."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10_000 ** (dim / d))
+    pe = jnp.zeros((d,), jnp.float32)
+    return pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab: int) -> jnp.ndarray:
+    """Mean token cross-entropy in f32; labels < 0 are masked out."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

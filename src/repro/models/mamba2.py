@@ -1,0 +1,207 @@
+"""Mamba2 (state-space duality / SSD) block — arXiv:2405.21060.
+
+Implements the chunked SSD algorithm: intra-chunk (quadratic, attention-like)
+term + inter-chunk recurrence carried by a sequential scan over chunks, which
+is the TPU-friendly formulation (dense matmuls inside chunks feed the MXU,
+the scan carries an [H, P, N] state).  The pure-jnp version here is the
+oracle for the Pallas kernel in kernels/mamba_scan.
+
+Decode is the exact SSM recurrence on a persistent [B, H, P, N] state plus a
+rolling conv window — no KV cache at all (the reason long_500k is
+SSM-eligible, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def mamba2_init(rng, cfg, dtype) -> dict:
+    D, di = cfg.d_model, cfg.d_inner
+    N, H, K = cfg.ssm_state, cfg.ssm_heads, cfg.conv_kernel
+    G = 1
+    conv_dim = di + 2 * G * N
+    r = jax.random.split(rng, 4)
+    return {
+        "in_proj": L.linear_init(
+            r[0], D, 2 * di + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(r[1], (K, conv_dim), jnp.float32)
+                   * (1.0 / K ** 0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": L.rmsnorm_init(di, dtype),
+        "out_proj": L.linear_init(r[2], di, D, dtype, scale=0.5),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCache:
+    conv: jnp.ndarray    # [B, K-1, conv_dim] rolling conv window
+    ssm: jnp.ndarray     # [B, H, P, N] recurrent state
+
+
+jax.tree_util.register_dataclass(MambaCache, data_fields=["conv", "ssm"],
+                                 meta_fields=[])
+
+
+def _split_proj(zxbcdt, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    G = 1
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: di + di + 2 * G * N]
+    dt = zxbcdt[..., di + di + 2 * G * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d, kernel K. xBC: [B,S,Cd], w: [K,Cd]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(dA):
+    """dA: [..., Q] -> [..., Q, Q]: sum_{j<m<=i} dA_m for i>=j else -inf."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # [..,i,j] = cs_i-cs_j
+    ii, jj = jnp.arange(Q)[:, None], jnp.arange(Q)[None, :]
+    return jnp.where(ii >= jj, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: [B,S,H,P] (pre-multiplied inputs), dt: [B,S,H] (post-softplus),
+    A: [H] (negative), Bm/Cm: [B,S,N] (single group).
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    dA = dtc * A                                         # [b,c,q,h] (<=0)
+    dA_h = dA.transpose(0, 1, 3, 2)                      # [b,c,h,q]
+    dA_cs = jnp.cumsum(dA_h, axis=-1)                    # [b,c,h,q]
+
+    # 1. intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(dA_h))                        # [b,c,h,q,q]
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)           # [b,c,q,k]
+    xdt = xc * dtc[..., None]                            # [b,c,q,h,p]
+    y_diag = jnp.einsum("bchqk,bcqk,bckhp->bcqhp",
+                        Lmat, CB.astype(Lmat.dtype), xdt)
+
+    # 2. per-chunk input states (decay to end of chunk)
+    decay_end = jnp.exp(dA_cs[..., -1:] - dA_cs)         # [b,c,h,q]
+    states = jnp.einsum("bcqn,bchq,bcqhp->bchpn",
+                        Bc, decay_end * dtc.transpose(0, 1, 3, 2), xc)
+
+    # 3. inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(dA_cs[..., -1])                # [b,c,h]
+    h0 = jnp.zeros((Bsz, H, P, N), x.dtype) if init_state is None \
+        else init_state
+
+    def scan_fn(h, inp):
+        s_c, g_c = inp                                   # [b,h,p,n], [b,h]
+        carried = h                                      # state BEFORE chunk
+        h = h * g_c[..., None, None] + s_c
+        return h, carried
+
+    states_cm = states.transpose(1, 0, 2, 3, 4)          # [c,b,h,p,n]
+    decay_cm = chunk_decay.transpose(1, 0, 2)            # [c,b,h]
+    h_final, carried = jax.lax.scan(scan_fn, h0, (states_cm, decay_cm))
+    carried = carried.transpose(1, 0, 2, 3, 4)           # [b,c,h,p,n]
+
+    # 4. off-diagonal contribution from carried states
+    decay_out = jnp.exp(dA_cs)                           # [b,c,h,q]
+    y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cc, carried, decay_out)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def mamba2_full(p, x, cfg):
+    """Train/prefill. x: [B,S,D] -> (y [B,S,D], MambaCache)."""
+    Bsz, S, D = x.shape
+    di, N, H, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.conv_kernel
+    P = cfg.ssm_head_dim
+
+    zxbcdt = L.linear(p["in_proj"], x)
+    z, xBC_raw, dt = _split_proj(zxbcdt, cfg)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :di].reshape(Bsz, S, H, P)
+    Bm = xBC[..., di: di + N]
+    Cm = xBC[..., di + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    # pad S to a chunk multiple; padded steps have dt=0 (identity decay, no
+    # input) so y[:S] and the final state are exact.
+    Q = cfg.ssm_chunk
+    S_pad = -(-S // Q) * Q
+    if S_pad != S:
+        pad = ((0, 0), (0, S_pad - S))
+        xs_p = jnp.pad(xs, pad + ((0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, pad + ((0, 0),))
+        Bm_p = jnp.pad(Bm, pad + ((0, 0),))
+        Cm_p = jnp.pad(Cm, pad + ((0, 0),))
+    else:
+        xs_p, dt_p, Bm_p, Cm_p = xs, dt, Bm, Cm
+    y, h_final = ssd_chunked(xs_p.astype(jnp.float32), dt_p, A,
+                             Bm_p.astype(jnp.float32),
+                             Cm_p.astype(jnp.float32), Q)
+    y = y[:, :S]
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.linear(p["out_proj"], y)
+    # cache the raw (pre-conv) inputs so decode continues the conv window
+    conv_cache = jnp.pad(
+        xBC_raw, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):]
+    return out, MambaCache(conv=conv_cache, ssm=h_final.astype(x.dtype))
+
+
+def mamba2_decode(p, x, cache: MambaCache, cfg):
+    """One-token recurrent step. x: [B,1,D] -> (y [B,1,D], cache)."""
+    Bsz = x.shape[0]
+    di, N, H, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.conv_kernel
+    P = cfg.ssm_head_dim
+
+    zxbcdt = L.linear(p["in_proj"], x)[:, 0]             # [B, *]
+    z, xBC_new, dt = _split_proj(zxbcdt, cfg)
+    window = jnp.concatenate([cache.conv, xBC_new[:, None, :]], axis=1)
+    conv_out = jax.nn.silu(
+        (window * p["conv_w"][None]).sum(axis=1) + p["conv_b"])
+    xs = conv_out[..., :di].reshape(Bsz, H, P)
+    Bm = conv_out[..., di: di + N]
+    Cm = conv_out[..., di + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                 # [B,H]
+    h = cache.ssm.astype(jnp.float32)
+    h = (h * dA[..., None, None]
+         + jnp.einsum("bh,bhp,bn->bhpn", dt, xs.astype(jnp.float32),
+                      Bm.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, di).astype(x.dtype)
+
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.linear(p["out_proj"], y)[:, None, :]
+    return out, MambaCache(conv=window[:, 1:], ssm=h.astype(x.dtype))

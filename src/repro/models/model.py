@@ -1,0 +1,572 @@
+"""Model assembly: scanned layer stacks + unified train/prefill/decode API.
+
+Compile-time discipline: homogeneous layer stacks are ``jax.lax.scan``-ned
+over stacked parameters (leading [L] axis), so HLO size is O(1) in depth —
+required to dry-run 60-layer/236B configs on a CPU-host compile.
+
+API (uniform across families):
+  init_params(rng, cfg)                 -> params pytree
+  forward(params, batch, cfg)           -> (logits, aux_loss)   # full seq
+  loss_fn(params, batch, cfg)           -> scalar loss
+  init_cache(cfg, batch_size, s_max)    -> cache pytree (zeros)
+  decode_step(params, token, cache, pos, cfg) -> (logits, cache)
+``batch``: {"tokens": [B,S], "labels": [B,S]} plus per-family stub inputs
+("audio_embeds" for whisper, "patch_embeds" for llava).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+# ----------------------------------------------------------------- helpers
+def _stack_init(block_init, rng, n, cfg, dtype, **kw):
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(lambda r: block_init(r, cfg, dtype, **kw))(rngs)
+
+
+def scan_decode(layer_params, cache, x, apply_fn, n_layers: int):
+    """Decode-path layer scan with the stacked cache as loop CARRY.
+
+    Carrying the cache (instead of slicing it as scan xs and restacking as
+    ys) lets XLA update the [L, ...] cache buffers in place per layer —
+    the xs/ys form double-buffers and copies the FULL stacked cache every
+    iteration, which dominated decode HBM traffic (EXPERIMENTS.md §Perf,
+    iteration C1: 68% of all bytes)."""
+
+    def body(carry, xs):
+        h, cache_st = carry
+        p_l, idx = xs
+        cache_l = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
+                                                   keepdims=False),
+            cache_st)
+        h, new_l = apply_fn(p_l, h, cache_l)
+        cache_st = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n, idx, 0),
+            cache_st, new_l)
+        return (h, cache_st), None
+
+    (x, cache), _ = jax.lax.scan(
+        body, (x, cache), (layer_params, jnp.arange(n_layers)))
+    return x, cache
+
+
+def _maybe_remat(fn, remat: bool):
+    return jax.checkpoint(fn) if remat else fn
+
+
+def _zero_kv(bsz, s, kv_heads, dh, layers, dtype):
+    shape = (layers, bsz, s, kv_heads, dh) if layers else (bsz, s, kv_heads,
+                                                           dh)
+    return A.KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+# =================================================================== dense
+def _dense_init(rng, cfg, dtype):
+    r = jax.random.split(rng, 3)
+    p = {"embed": L.embedding_init(r[0], cfg.vocab_size, cfg.d_model, dtype),
+         "layers": _stack_init(B.dense_block_init, r[1], cfg.n_layers, cfg,
+                               dtype),
+         "final_norm": L.rmsnorm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.embedding_init(r[2], cfg.vocab_size, cfg.d_model,
+                                        dtype)
+    return p
+
+
+def _logits(p, x, cfg):
+    x = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    table = p.get("unembed", p["embed"])
+    return L.unembed(table, x)
+
+
+def _dense_forward(p, batch, cfg, remat=False, constrain=None):
+    c = constrain or (lambda t: t)
+    x = L.embed(p["embed"], batch["tokens"])
+    if cfg.family == "vlm":
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    x = c(x)
+
+    def body(h, p_l):
+        h, _ = B.dense_block_full(p_l, h, cfg, window=cfg.sliding_window)
+        return c(h), None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, remat), x, p["layers"])
+    return _logits(p, x, cfg), jnp.float32(0.0)
+
+
+def _flat_kv_zeros(cfg, bsz, s_max, layers, dtype):
+    """Stacked decode cache, KV-major [L, B, KV, S, dh] (see §Perf C2)."""
+    w = min(cfg.sliding_window, s_max) if cfg.sliding_window else s_max
+    shape = (layers, bsz, cfg.n_kv_heads, w, cfg.head_dim)
+    return A.KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+import os
+
+#: §Perf baseline reference: the pre-hillclimb decode structure (scan
+#: xs/ys cache restacking + [L,B,S,KV,dh] layout).  Selected with
+#: REPRO_LEGACY_DECODE=1 so iteration deltas stay reproducible.
+_LEGACY_DECODE = os.environ.get("REPRO_LEGACY_DECODE") == "1"
+
+
+def _dense_cache(cfg, bsz, s_max, dtype):
+    if _LEGACY_DECODE:
+        w = min(cfg.sliding_window, s_max) if cfg.sliding_window else s_max
+        return _zero_kv(bsz, w, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers,
+                        dtype)
+    return _flat_kv_zeros(cfg, bsz, s_max, cfg.n_layers, dtype)
+
+
+def _dense_decode_legacy(p, token, cache, pos, cfg):
+    x = L.embed(p["embed"], token)
+
+    def body(h, xs):
+        p_l, c_l = xs
+        h, c_l = B.dense_block_decode(p_l, h, c_l, pos, cfg,
+                                      window=cfg.sliding_window)
+        return h, c_l
+
+    x, cache = jax.lax.scan(body, x, (p["layers"], cache))
+    return _logits(p, x, cfg), cache
+
+
+def _dense_decode(p, token, cache, pos, cfg):
+    if _LEGACY_DECODE:
+        return _dense_decode_legacy(p, token, cache, pos, cfg)
+    x = L.embed(p["embed"], token)
+
+    def body(carry, xs):
+        h, k_st, v_st = carry
+        p_l, idx = xs
+        h, k_st, v_st = B.dense_block_decode_flat(
+            p_l, h, k_st, v_st, idx, pos, cfg, window=cfg.sliding_window)
+        return (h, k_st, v_st), None
+
+    (x, k_st, v_st), _ = jax.lax.scan(
+        body, (x, cache.k, cache.v),
+        (p["layers"], jnp.arange(cfg.n_layers)))
+    return _logits(p, x, cfg), A.KVCache(k=k_st, v=v_st)
+
+
+# ==================================================================== MoE
+# llama4-style: alternating dense / MoE super-layers.
+def _moe_alt_init(rng, cfg, dtype):
+    r = jax.random.split(rng, 4)
+    n_super = cfg.n_layers // 2
+    return {
+        "embed": L.embedding_init(r[0], cfg.vocab_size, cfg.d_model, dtype),
+        "dense_layers": _stack_init(B.dense_block_init, r[1], n_super, cfg,
+                                    dtype, d_ff=cfg.dense_d_ff or cfg.d_ff),
+        "moe_layers": _stack_init(B.moe_block_init, r[2], n_super, cfg,
+                                  dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        "unembed": L.embedding_init(r[3], cfg.vocab_size, cfg.d_model,
+                                    dtype),
+    }
+
+
+def _moe_alt_forward(p, batch, cfg, remat=False, constrain=None):
+    c = constrain or (lambda t: t)
+    x = c(L.embed(p["embed"], batch["tokens"]))
+
+    def body(carry, xs):
+        h, aux = carry
+        pd, pm = xs
+        h, _ = B.dense_block_full(pd, h, cfg, window=cfg.sliding_window)
+        h, _, aux_l, load = B.moe_block_full(pm, h, cfg,
+                                             window=cfg.sliding_window)
+        return (c(h), aux + aux_l), load
+
+    (x, aux), loads = jax.lax.scan(
+        _maybe_remat(body, remat), (x, jnp.float32(0.0)),
+        (p["dense_layers"], p["moe_layers"]))
+    return _logits(p, x, cfg), aux
+
+
+def _moe_alt_cache(cfg, bsz, s_max, dtype):
+    n_super = cfg.n_layers // 2
+    return {"dense": _flat_kv_zeros(cfg, bsz, s_max, n_super, dtype),
+            "moe": _flat_kv_zeros(cfg, bsz, s_max, n_super, dtype)}
+
+
+def _moe_alt_decode(p, token, cache, pos, cfg):
+    x = L.embed(p["embed"], token)
+    w = cfg.sliding_window
+
+    def body(carry, xs):
+        h, dk, dv, mk, mv = carry
+        pd, pm, idx = xs
+        h, dk, dv = B.dense_block_decode_flat(pd, h, dk, dv, idx, pos, cfg,
+                                              window=w)
+        h, (mk, mv), _ = B.moe_block_decode_flat(pm, h, (mk, mv), idx, pos,
+                                                 cfg, window=w)
+        return (h, dk, dv, mk, mv), None
+
+    n_super = cfg.n_layers // 2
+    (x, dk, dv, mk, mv), _ = jax.lax.scan(
+        body,
+        (x, cache["dense"].k, cache["dense"].v, cache["moe"].k,
+         cache["moe"].v),
+        (p["dense_layers"], p["moe_layers"], jnp.arange(n_super)))
+    return _logits(p, x, cfg), {"dense": A.KVCache(k=dk, v=dv),
+                                "moe": A.KVCache(k=mk, v=mv)}
+
+
+# deepseek-style: first layer dense(MLA), remaining layers MoE(MLA).
+def _moe_mla_init(rng, cfg, dtype):
+    r = jax.random.split(rng, 5)
+    return {
+        "embed": L.embedding_init(r[0], cfg.vocab_size, cfg.d_model, dtype),
+        "layer0": B.mla_dense_block_init(r[1], cfg, dtype),
+        "moe_layers": _stack_init(B.moe_block_init, r[2],
+                                  cfg.n_layers - cfg.first_dense, cfg,
+                                  dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        "unembed": L.embedding_init(r[3], cfg.vocab_size, cfg.d_model,
+                                    dtype),
+    }
+
+
+def _moe_mla_forward(p, batch, cfg, remat=False, constrain=None):
+    c = constrain or (lambda t: t)
+    x = c(L.embed(p["embed"], batch["tokens"]))
+    x, _ = B.mla_dense_block_full(p["layer0"], x, cfg)
+    x = c(x)
+
+    def body(carry, p_l):
+        h, aux = carry
+        h, _, aux_l, load = B.moe_block_full(p_l, h, cfg)
+        return (c(h), aux + aux_l), load
+
+    (x, aux), _ = jax.lax.scan(_maybe_remat(body, remat),
+                               (x, jnp.float32(0.0)), p["moe_layers"])
+    return _logits(p, x, cfg), aux
+
+
+def _mla_zero(bsz, s, cfg, layers, dtype):
+    shape_c = (layers, bsz, s, cfg.kv_lora_rank) if layers else \
+        (bsz, s, cfg.kv_lora_rank)
+    shape_r = (layers, bsz, s, cfg.rope_head_dim) if layers else \
+        (bsz, s, cfg.rope_head_dim)
+    return A.MLACache(c_kv=jnp.zeros(shape_c, dtype),
+                      k_rope=jnp.zeros(shape_r, dtype))
+
+
+def _moe_mla_cache(cfg, bsz, s_max, dtype):
+    return {"layer0": _mla_zero(bsz, s_max, cfg, 0, dtype),
+            "moe": _mla_zero(bsz, s_max, cfg,
+                             cfg.n_layers - cfg.first_dense, dtype)}
+
+
+def _moe_mla_decode(p, token, cache, pos, cfg):
+    x = L.embed(p["embed"], token)
+    x, c0 = B.mla_dense_block_decode(p["layer0"], x, cache["layer0"], pos,
+                                     cfg)
+
+    def body(carry, xs):
+        h, c_st, r_st = carry
+        p_l, idx = xs
+        h, (c_st, r_st), _ = B.moe_block_decode_flat(
+            p_l, h, (c_st, r_st), idx, pos, cfg)
+        return (h, c_st, r_st), None
+
+    (x, c_st, r_st), _ = jax.lax.scan(
+        body, (x, cache["moe"].c_kv, cache["moe"].k_rope),
+        (p["moe_layers"], jnp.arange(cfg.n_layers - cfg.first_dense)))
+    return _logits(p, x, cfg), {
+        "layer0": c0, "moe": A.MLACache(c_kv=c_st, k_rope=r_st)}
+
+
+# ==================================================================== SSM
+def _ssm_init(rng, cfg, dtype):
+    r = jax.random.split(rng, 3)
+    return {"embed": L.embedding_init(r[0], cfg.vocab_size, cfg.d_model,
+                                      dtype),
+            "layers": _stack_init(B.mamba_block_init, r[1], cfg.n_layers,
+                                  cfg, dtype),
+            "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+            "unembed": L.embedding_init(r[2], cfg.vocab_size, cfg.d_model,
+                                        dtype)}
+
+
+def _ssm_forward(p, batch, cfg, remat=False, constrain=None):
+    c = constrain or (lambda t: t)
+    x = c(L.embed(p["embed"], batch["tokens"]))
+
+    def body(h, p_l):
+        h, _ = B.mamba_block_full(p_l, h, cfg)
+        return c(h), None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, remat), x, p["layers"])
+    return _logits(p, x, cfg), jnp.float32(0.0)
+
+
+def _mamba_zero(cfg, bsz, layers, dtype):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    shape_c = ((layers, bsz, cfg.conv_kernel - 1, conv_dim) if layers else
+               (bsz, cfg.conv_kernel - 1, conv_dim))
+    shape_s = ((layers, bsz, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state)
+               if layers else
+               (bsz, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state))
+    return M.MambaCache(conv=jnp.zeros(shape_c, dtype),
+                        ssm=jnp.zeros(shape_s, dtype))
+
+
+def _ssm_cache(cfg, bsz, s_max, dtype):
+    del s_max  # recurrent state: O(1) in sequence length
+    return _mamba_zero(cfg, bsz, cfg.n_layers, dtype)
+
+
+def _ssm_decode(p, token, cache, pos, cfg):
+    del pos
+    x = L.embed(p["embed"], token)
+    x, cache = scan_decode(
+        p["layers"], cache, x,
+        lambda p_l, h, c_l: B.mamba_block_decode(p_l, h, c_l, cfg),
+        cfg.n_layers)
+    return _logits(p, x, cfg), cache
+
+
+# ================================================================= hybrid
+# zamba2-style: groups of mamba layers with ONE shared attention block
+# (weights reused at every application) between groups.
+def _hybrid_dims(cfg):
+    group = cfg.attn_every
+    n_groups = cfg.n_layers // group
+    tail = cfg.n_layers - n_groups * group
+    return group, n_groups, tail
+
+
+def _hybrid_init(rng, cfg, dtype):
+    r = jax.random.split(rng, 5)
+    group, n_groups, tail = _hybrid_dims(cfg)
+    p = {"embed": L.embedding_init(r[0], cfg.vocab_size, cfg.d_model, dtype),
+         "mamba_groups": jax.vmap(
+             lambda rr: _stack_init(B.mamba_block_init, rr, group, cfg,
+                                    dtype))(jax.random.split(r[1], n_groups)),
+         "shared_attn": B.dense_block_init(r[2], cfg, dtype),
+         "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+         "unembed": L.embedding_init(r[4], cfg.vocab_size, cfg.d_model,
+                                     dtype)}
+    if tail:
+        p["mamba_tail"] = _stack_init(B.mamba_block_init, r[3], tail, cfg,
+                                      dtype)
+    return p
+
+
+def _hybrid_forward(p, batch, cfg, remat=False, constrain=None):
+    c = constrain or (lambda t: t)
+    x = c(L.embed(p["embed"], batch["tokens"]))
+    group, n_groups, tail = _hybrid_dims(cfg)
+
+    def inner(h, p_l):
+        h, _ = B.mamba_block_full(p_l, h, cfg)
+        return h, None
+
+    def outer(h, p_g):
+        h, _ = jax.lax.scan(inner, h, p_g)
+        h, _ = B.dense_block_full(p["shared_attn"], h, cfg)  # shared weights
+        return c(h), None
+
+    x, _ = jax.lax.scan(_maybe_remat(outer, remat), x, p["mamba_groups"])
+    if tail:
+        x, _ = jax.lax.scan(inner, x, p["mamba_tail"])
+    return _logits(p, x, cfg), jnp.float32(0.0)
+
+
+def _hybrid_cache(cfg, bsz, s_max, dtype):
+    group, n_groups, tail = _hybrid_dims(cfg)
+    c = {"mamba_groups": jax.tree.map(
+            lambda z: jnp.broadcast_to(z[None], (n_groups,) + z.shape),
+            _mamba_zero(cfg, bsz, group, dtype)),
+         "attn": _zero_kv(bsz, s_max, cfg.n_kv_heads, cfg.head_dim,
+                          n_groups, dtype)}
+    if tail:
+        c["mamba_tail"] = _mamba_zero(cfg, bsz, tail, dtype)
+    return c
+
+
+def _hybrid_decode(p, token, cache, pos, cfg):
+    x = L.embed(p["embed"], token)
+    group, n_groups, tail = _hybrid_dims(cfg)
+
+    def inner_apply(p_l, h, c_l):
+        return B.mamba_block_decode(p_l, h, c_l, cfg)
+
+    def outer_apply(p_g, h, c_g):
+        h, mamba_c = scan_decode(p_g, c_g["mamba"], h, inner_apply, group)
+        h, kv_g = B.dense_block_decode(p["shared_attn"], h, c_g["attn"],
+                                       pos, cfg)
+        return h, {"mamba": mamba_c, "attn": kv_g}
+
+    x, outer_c = scan_decode(
+        p["mamba_groups"],
+        {"mamba": cache["mamba_groups"], "attn": cache["attn"]},
+        x, outer_apply, n_groups)
+    new = {"mamba_groups": outer_c["mamba"], "attn": outer_c["attn"]}
+    if tail:
+        x, c_tail = scan_decode(p["mamba_tail"], cache["mamba_tail"], x,
+                                inner_apply, tail)
+        new["mamba_tail"] = c_tail
+    return _logits(p, x, cfg), new
+
+
+# ================================================================= enc-dec
+def _encdec_init(rng, cfg, dtype):
+    r = jax.random.split(rng, 4)
+    return {"embed": L.embedding_init(r[0], cfg.vocab_size, cfg.d_model,
+                                      dtype),
+            "enc_layers": _stack_init(B.encoder_block_init, r[1],
+                                      cfg.n_enc_layers, cfg, dtype),
+            "enc_norm": L.rmsnorm_init(cfg.d_model, dtype),
+            "dec_layers": _stack_init(B.decoder_block_init, r[2],
+                                      cfg.n_layers, cfg, dtype),
+            "final_norm": L.rmsnorm_init(cfg.d_model, dtype)}
+
+
+def _encode(p, audio_embeds, cfg):
+    x = audio_embeds + L.sinusoidal_positions(
+        audio_embeds.shape[1], cfg.d_model).astype(audio_embeds.dtype)[None]
+
+    def body(h, p_l):
+        return B.encoder_block_full(p_l, h, cfg), None
+
+    x, _ = jax.lax.scan(body, x, p["enc_layers"])
+    return L.rmsnorm(p["enc_norm"], x, cfg.norm_eps)
+
+
+def _encdec_forward(p, batch, cfg, remat=False, constrain=None):
+    c = constrain or (lambda t: t)
+    enc_out = c(_encode(p, batch["audio_embeds"], cfg))
+    S = batch["tokens"].shape[1]
+    x = L.embed(p["embed"], batch["tokens"])
+    x = c(x + L.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None])
+
+    def body(h, p_l):
+        enc_kv = B.cross_kv(p_l, enc_out, cfg)
+        h, _ = B.decoder_block_full(p_l, h, enc_kv, cfg)
+        return c(h), None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, remat), x, p["dec_layers"])
+    x = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    return L.unembed(p["embed"], x), jnp.float32(0.0)
+
+
+def _encdec_cache(cfg, bsz, s_max, dtype):
+    return {"self": _zero_kv(bsz, s_max, cfg.n_kv_heads, cfg.head_dim,
+                             cfg.n_layers, dtype),
+            "cross": _zero_kv(bsz, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim,
+                              cfg.n_layers, dtype)}
+
+
+def _encdec_decode(p, token, cache, pos, cfg):
+    x = L.embed(p["embed"], token)
+    x = x + L.sinusoidal_at(jnp.asarray(pos), cfg.d_model)[None, None] \
+        .astype(x.dtype)
+
+    # cross-KV is read-only: slice it as scan xs; carry only the self cache
+    def body(carry, xs):
+        h, self_st = carry
+        p_l, cross_l, idx = xs
+        self_l = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
+                                                   keepdims=False), self_st)
+        h, self_c = B.decoder_block_decode(p_l, h, self_l, cross_l, pos,
+                                           cfg)
+        self_st = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n, idx, 0),
+            self_st, self_c)
+        return (h, self_st), None
+
+    (x, self_c), _ = jax.lax.scan(
+        body, (x, cache["self"]),
+        (p["dec_layers"], cache["cross"], jnp.arange(cfg.n_layers)))
+    x = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    return L.unembed(p["embed"], x), {"self": self_c,
+                                      "cross": cache["cross"]}
+
+
+# ================================================================ dispatch
+_FAMILY = {
+    "dense": (_dense_init, _dense_forward, _dense_cache, _dense_decode),
+    "vlm": (_dense_init, _dense_forward, _dense_cache, _dense_decode),
+    "ssm": (_ssm_init, _ssm_forward, _ssm_cache, _ssm_decode),
+    "hybrid": (_hybrid_init, _hybrid_forward, _hybrid_cache, _hybrid_decode),
+    "encdec": (_encdec_init, _encdec_forward, _encdec_cache, _encdec_decode),
+}
+
+
+def _family_fns(cfg):
+    if cfg.family == "moe":
+        if cfg.use_mla:
+            return (_moe_mla_init, _moe_mla_forward, _moe_mla_cache,
+                    _moe_mla_decode)
+        return (_moe_alt_init, _moe_alt_forward, _moe_alt_cache,
+                _moe_alt_decode)
+    return _FAMILY[cfg.family]
+
+
+def init_params(rng, cfg):
+    dtype = L.dtype_of(cfg)
+    return _family_fns(cfg)[0](rng, cfg, dtype)
+
+
+def forward(params, batch, cfg, remat: bool = False, constrain=None):
+    return _family_fns(cfg)[1](params, batch, cfg, remat, constrain)
+
+
+def loss_fn(params, batch, cfg, remat: bool = False, constrain=None):
+    logits, aux = forward(params, batch, cfg, remat, constrain)
+    labels = batch["labels"]
+    if cfg.family == "vlm":   # patch positions carry no labels
+        pad = jnp.full(batch["patch_embeds"].shape[:2], -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return L.cross_entropy(logits, labels, cfg.vocab_size) + aux
+
+
+def init_cache(cfg, bsz: int, s_max: int):
+    return _family_fns(cfg)[2](cfg, bsz, s_max, L.dtype_of(cfg))
+
+
+def decode_step(params, token, cache, pos, cfg):
+    """token: [B,1] int32; pos: scalar int32. -> (logits [B,1,V], cache)."""
+    return _family_fns(cfg)[3](params, token, cache, pos, cfg)
+
+
+def prefill(params, batch, cfg):
+    """Full-sequence forward returning logits (cache wiring for serving is
+    provided by the paged-KV tiering layer, repro.tiering)."""
+    return forward(params, batch, cfg)[0]
+
+
+@functools.lru_cache(maxsize=64)
+def count_params(cfg) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return int(sum(np.prod(s.shape) for s in jax.tree.leaves(shapes)))
+
+
+def active_params(cfg) -> int:
+    """Active parameters per token (MoE: routed experts count k-of-E)."""
+    total = count_params(cfg)
+    if cfg.family != "moe":
+        return total
+    # subtract inactive routed-expert weights
+    F, D, E, k = cfg.moe_d_ff, cfg.d_model, cfg.n_experts, \
+        cfg.experts_per_token
+    n_moe_layers = (cfg.n_layers - cfg.first_dense if cfg.use_mla
+                    else cfg.n_layers // 2)
+    per_expert = 3 * D * F
+    return total - n_moe_layers * per_expert * (E - k)

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts with GShard-style capacity-based dispatch.
+
+Top-k routing with per-slot priority, static per-expert capacity (drops on
+overflow), optional shared experts (DeepSeek-V2), and a load-balancing
+auxiliary loss.  Expert weights are stacked [E, ...] so expert parallelism
+is a plain PartitionSpec over the 'model' mesh axis; dispatch/combine are
+einsums that SPMD turns into all-to-alls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def moe_init(rng, cfg, dtype) -> dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    r = jax.random.split(rng, 4)
+    std = 1.0 / (D ** 0.5)
+    p = {
+        "router": {"w": (jax.random.normal(r[0], (D, E), jnp.float32)
+                         * std).astype(jnp.float32)},   # router in f32
+        "wi": (jax.random.normal(r[1], (E, D, 2 * F), jnp.float32)
+               * std).astype(dtype),
+        "wo": (jax.random.normal(r[2], (E, F, D), jnp.float32)
+               * (1.0 / F ** 0.5)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.swiglu_init(r[3], D,
+                                    cfg.n_shared_experts * F, dtype)
+    return p
+
+
+# GShard grouping was tried and REFUTED for this dispatch formulation
+# (§Perf iteration A6: per-group capacity + sharded expert buffers raised
+# the collective term 54->477 s and memory 58->152 s; even expert-only
+# constraints measured 68/54 vs 58/54 without).  The scatter-based
+# dispatch with global capacity (A3) remains the best measured layout.
+N_GROUPS = 1
+
+
+def _capacity(tokens: int, cfg) -> int:
+    cap = int(tokens * cfg.experts_per_token * cfg.capacity_factor
+              / cfg.n_experts)
+    return max(4, -(-cap // 4) * 4)   # round up to a multiple of 4
+
+
+def moe_apply(p, x, cfg):
+    """x: [B, S, D] -> (y [B,S,D], aux_loss scalar f32).
+
+    Router statistics (tokens per expert) are also returned for the ARMS
+    expert-tiering integration — they are exactly the paper's "page access
+    counts" at expert granularity.
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.experts_per_token
+    G = N_GROUPS if T % N_GROUPS == 0 and T >= N_GROUPS else 1
+    Cg = _capacity(T // G, cfg)
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"])        # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # [T,k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                 # renormalize
+
+    # --- slot-priority position assignment, PER GROUP (GShard) ---
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)     # [T,k,E]
+    grouped = onehot.reshape(G, T // G, k, E)
+    slot_major = grouped.transpose(0, 2, 1, 3).reshape(G, k * (T // G), E)
+    pos_flat = jnp.cumsum(slot_major, axis=1) - slot_major
+    pos = pos_flat.reshape(G, k, T // G, E).transpose(0, 2, 1, 3)
+    pos_tk = (pos * grouped).sum(-1).reshape(T, k)              # [T,k]
+    keep = pos_tk < Cg
+
+    gates = jnp.where(keep, gate_vals, 0.0)
+    # --- scatter/gather dispatch (§Perf iteration A3) ---
+    # Scatter-add moves exactly the T*k token copies routing requires; the
+    # einsum form materialized [T,E,C] one-hots and forced SPMD to
+    # replicate the token dim per device.
+    group_of = jnp.arange(T) // (T // G)                        # [T]
+    e_idx = jnp.where(keep, expert_idx, E)       # overflow -> dropped row
+    slot_idx = (group_of[:, None] * Cg
+                + jnp.clip(pos_tk, 0, Cg - 1))                  # [T,k]
+    xin = jnp.zeros((E, G * Cg, D), x.dtype).at[e_idx, slot_idx].add(
+        xf[:, None, :] * keep[..., None].astype(x.dtype), mode="drop")
+    gate_up = jnp.einsum("ecd,edf->ecf", xin, p["wi"])
+    g, u = jnp.split(gate_up, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    yout = jnp.einsum("ecf,efd->ecd", h, p["wo"])               # [E,GCg,D]
+    y = (yout[e_idx.clip(0, E - 1), slot_idx]                   # [T,k,D]
+         * gates[..., None].astype(x.dtype)).sum(axis=1)        # [T,D]
+
+    if cfg.n_shared_experts:
+        y = y + L.swiglu(p["shared"], xf)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_prob = probs.mean(axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(frac_tokens * mean_prob)
+
+    expert_load = jnp.zeros((E,), jnp.float32).at[e_idx].add(
+        keep.astype(jnp.float32), mode="drop")                  # [E] tokens
+    return y.reshape(B, S, D), aux, expert_load

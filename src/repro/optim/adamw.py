@@ -1,0 +1,101 @@
+"""AdamW with decoupled weight decay, cosine LR schedule and global-norm
+clipping — written against plain pytrees (no optax dependency).
+
+Optimizer state (m, v in f32, plus an f32 master copy when params are bf16)
+inherits the parameter sharding, which combined with the FSDP param specs
+gives ZeRO-style sharded optimizer memory for free under GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import pytree_dataclass, static_dataclass
+
+
+@static_dataclass
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    master_fp32: bool = True
+
+
+@pytree_dataclass
+class AdamWState:
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any   # f32 master params (or None-like empty dict)
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if cfg.master_fp32 else {})
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), \
+        norm
+
+
+def update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    """-> (new_params, new_state, metrics)."""
+    grads_f32, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m,
+                     grads_f32)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v,
+                     grads_f32)
+
+    base = state.master if cfg.master_fp32 else params
+
+    def upd(p, mm, vv):
+        u = (mm / bc1) / (jnp.sqrt(vv / bc2) + cfg.eps)
+        return p - lr * (u + cfg.weight_decay * p.astype(jnp.float32))
+
+    new_base = jax.tree.map(upd, base, m, v)
+    if cfg.master_fp32:
+        new_params = jax.tree.map(
+            lambda nb, p: nb.astype(p.dtype), new_base, params)
+        new_master = new_base
+    else:
+        new_params = jax.tree.map(
+            lambda nb, p: nb.astype(p.dtype), new_base, params)
+        new_master = {}
+    new_state = AdamWState(step=step, m=m, v=v, master=new_master)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

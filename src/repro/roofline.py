@@ -1,0 +1,371 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh):
+
+    compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  collective_bytes is
+parsed from the (optimized) HLO text: operand bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, multiplied by
+the trip counts of enclosing while loops (lax.scan bodies), which we recover
+from the loop-condition constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e-class hardware constants (per the assignment).
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_RE = re.compile(r"(?:to_apply|body|condition|calls)=%?([\w\.\-]+)")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Sum byte sizes of all shapes in an HLO result signature."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_computations(hlo: str):
+    """-> {name: list of instruction lines}.
+
+    A computation header is a line ending in '{' that contains '->'
+    (possibly with tuple-typed parameters); its name is the token before
+    the first '(' minus any ENTRY prefix and '%' sigil."""
+    comps = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped:
+            head = stripped.split("(", 1)[0]
+            head = head.replace("ENTRY", "").strip().lstrip("%")
+            cur = head
+            comps[cur] = []
+        elif stripped == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines) -> int:
+    """Best-effort scan trip count from a while-condition computation:
+    the comparison constant (lax.scan emits `compare(i, K)` with K const)."""
+    consts = [int(m.group(1))
+              for line in cond_lines
+              for m in [re.search(r"constant\((\d+)\)", line)] if m]
+    return max(consts) if consts else 1
+
+
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?[^=]*?)\s*([a-z][\w\-]*)\(")
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "iota", "after-all", "partition-id", "replica-id"}
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _computation_multipliers(comps):
+    """Scan-aware execution-count multiplier per computation (while trip
+    counts propagated through call edges)."""
+    trip = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln and "body=" in ln:
+                body = re.search(r"body=%?([\w\.\-]+)", ln)
+                cond = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if not body:
+                    continue
+                # prefer XLA's own annotation when present
+                ktc = re.search(r'known_trip_count[^0-9]*(\d+)', ln)
+                if ktc:
+                    k = int(ktc.group(1))
+                elif cond and cond.group(1) in comps:
+                    k = _trip_count(comps[cond.group(1)])
+                else:
+                    k = 1
+                trip[(name, body.group(1))] = k
+
+    # call edges: computation -> callees mentioned via to_apply/calls/body
+    edges = {name: set() for name in comps}
+    for name, lines in comps.items():
+        for ln in lines:
+            for callee in _CALL_RE.findall(ln):
+                if callee in comps and callee != name:
+                    edges[name].add(callee)
+
+    mult = {name: 1 for name in comps}
+    roots = [n for n in comps
+             if not any(n in e for e in edges.values())]
+    seen = set()
+
+    def visit(name, m):
+        if (name, m) in seen or len(seen) > 10_000:
+            return
+        seen.add((name, m))
+        mult[name] = max(mult[name], m)
+        for callee in edges[name]:
+            k = trip.get((name, callee), 1)
+            visit(callee, m * k)
+
+    for r in roots:
+        visit(r, 1)
+    return mult
+
+
+_PARAM_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*([^=]*?)\s*"
+                       r"parameter\((\d+)\)")
+_SLICE_OPS = ("dynamic-slice", "slice", "gather")
+
+
+def _fusion_reads(comps):
+    """Per fused computation: ({param_index: effective bytes or None},
+    root_dus_update_bytes or None).
+
+    A parameter consumed ONLY by slicing ops reads just the slices (the
+    stacked-layer-weights-inside-scan pattern); None means a full read.
+    A fusion whose ROOT is dynamic-update-slice writes only the update
+    region in place (XLA aliases the output with the big operand), so we
+    also report the update's byte size; the aliased buffer param is not a
+    full read either.
+    """
+    out = {}
+    for cname, lines in comps.items():
+        if "fused_computation" not in cname:
+            continue
+        params = {}     # value name -> (index, full bytes)
+        sizes = {}
+        root_dus = None
+        dus_buffers = set()
+        for ln in lines:
+            pm = _PARAM_RE.match(ln)
+            if pm:
+                params[pm.group(1)] = (int(pm.group(3)),
+                                       _shape_bytes(pm.group(2)))
+                sizes[pm.group(1)] = _shape_bytes(pm.group(2))
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            nm, rtype, op = im.groups()
+            sizes[nm] = _shape_bytes(rtype)
+            if op == "dynamic-update-slice" and ln.startswith("ROOT"):
+                ops_ = _operand_names(ln)
+                if len(ops_) >= 2:
+                    root_dus = sizes.get(ops_[1], None)
+                    dus_buffers.add(ops_[0])
+        eff = {}
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            _, rtype, op = im.groups()
+            ops_ = _operand_names(ln)
+            for pos_i, o in enumerate(ops_):
+                if o not in params:
+                    continue
+                idx, _full = params[o]
+                if op == "dynamic-update-slice" and pos_i == 0 and \
+                        o in dus_buffers:
+                    continue   # aliased in-place buffer: not a read
+                if op in _SLICE_OPS:
+                    prev = eff.get(idx, 0)
+                    if prev is not None:
+                        eff[idx] = prev + _shape_bytes(rtype)
+                else:
+                    eff[idx] = None          # non-slice consumer: full read
+        out[cname] = ({idx: eff.get(idx, 0)
+                       for idx, _ in params.values()}, root_dus)
+    return out
+
+
+def analyze_hlo(hlo: str) -> dict:
+    """Scan-aware per-device cost model over post-SPMD optimized HLO.
+
+    Returns dict(flops, bytes, collectives={kind: bytes, _total}).
+    - flops: 2*prod(result_dims)*prod(contracting_dims) per dot, times the
+      enclosing scan trip counts (XLA cost_analysis counts while bodies
+      once, which undercounts layer-scanned models by ~n_layers).
+    - bytes: operand + result bytes of every top-level (post-fusion)
+      instruction — an HBM-traffic model (fusion internals stay in
+      registers/VMEM).
+    - collectives: operand bytes per collective kind.
+    """
+    comps = _parse_computations(hlo)
+    mult = _computation_multipliers(comps)
+    freads = _fusion_reads(comps)
+
+    # name -> result bytes, per computation (HLO is SSA per computation)
+    flops = 0.0
+    byts = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1)
+        sizes = {}
+        shapes = {}
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            name, rtype, op = im.groups()
+            rbytes = _shape_bytes(rtype)
+            sizes[name] = rbytes
+            sm = _SHAPE_RE.search(rtype)
+            if sm:
+                dims = [int(d) for d in sm.group(2).split(",") if d]
+                shapes[name] = dims
+            if op == "dot":
+                ops = _operand_names(ln)
+                cd = _CDIMS_RE.search(ln)
+                k = 1
+                if cd and ops:
+                    lhs = shapes.get(ops[0])
+                    if lhs:
+                        for d in cd.group(1).split(","):
+                            if d and int(d) < len(lhs):
+                                k *= lhs[int(d)]
+                rdims = shapes.get(name, [1])
+                n = 1
+                for d in rdims:
+                    n *= d
+                flops += 2.0 * n * k * m
+                continue
+            if "fused_computation" in cname:
+                continue  # fusion internals don't touch HBM
+            if op in _SKIP_OPS or op in ("while", "conditional", "call"):
+                continue
+            ops_ = _operand_names(ln)
+            # slicing/indexing ops only touch the slice, not the operand:
+            if op in ("dynamic-slice", "slice", "gather"):
+                byts += 2.0 * rbytes * m          # read slice + write result
+                continue
+            if op == "dynamic-update-slice":
+                u = sizes.get(ops_[1], rbytes) if len(ops_) > 1 else rbytes
+                byts += 2.0 * u * m               # read + write the update
+                continue
+            if op == "scatter":
+                u = sizes.get(ops_[-1], 0) if ops_ else 0
+                byts += 2.0 * u * m
+                continue
+            is_coll = next((c for c in _COLLECTIVES if op.startswith(c)),
+                           None)
+            if op == "fusion":
+                callee = _CALL_RE.search(ln)
+                eff, root_dus = freads.get(callee.group(1), ({}, None)) \
+                    if callee else ({}, None)
+                obytes = 0
+                for j, o in enumerate(ops_):
+                    e = eff.get(j, None)
+                    obytes += sizes.get(o, 0) if e is None else e
+                if root_dus is not None:
+                    # in-place DUS fusion: writes only the update region
+                    byts += (root_dus + obytes) * m
+                    continue
+            else:
+                obytes = sum(sizes.get(o, 0) for o in ops_)
+            byts += (rbytes + obytes) * m
+            if is_coll:
+                coll[is_coll] += rbytes * m
+    coll["_total"] = sum(coll.values())
+    return {"flops": flops, "bytes": byts, "collectives": coll}
+
+
+def _operand_names(ln: str):
+    """Value operands of an instruction line (inside the first paren
+    group, before any attribute list)."""
+    start = ln.find("(")
+    if start < 0:
+        return []
+    depth = 0
+    end = start
+    for i, ch in enumerate(ln[start:], start):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = ln[start + 1: end]
+    return re.findall(r"%([\w\.\-]+)", inner)
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Back-compat wrapper -> {kind: bytes, '_total': bytes}."""
+    coll = analyze_hlo(hlo)["collectives"]
+    return {k: int(v) for k, v in coll.items()}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_hbm: float
+    bytes_collective: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> dict:
+        return dict(compute_s=self.compute_s, memory_s=self.memory_s,
+                    collective_s=self.collective_s, dominant=self.dominant,
+                    flops=self.flops, bytes_hbm=self.bytes_hbm,
+                    bytes_collective=self.bytes_collective)
+
+
+def roofline(cost_analysis: dict, coll_bytes: float,
+             chips: int) -> RooflineTerms:
+    flops = float(cost_analysis.get("flops", 0.0))
+    byts = float(cost_analysis.get("bytes accessed", 0.0))
+    return RooflineTerms(
+        compute_s=flops / (chips * PEAK_FLOPS_BF16),
+        memory_s=byts / (chips * HBM_BW),
+        collective_s=coll_bytes / (chips * ICI_BW),
+        flops=flops, bytes_hbm=byts, bytes_collective=coll_bytes,
+        chips=chips)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode D = B."""
+    from repro.models.model import active_params
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch   # decode: one token per sequence

@@ -1,0 +1,18 @@
+"""PEBS-style access sampling emulation (paper §2, §4.1).
+
+Hardware event sampling observes roughly 1 in ``period`` accesses; over an
+interval the per-page sample count is well modeled as Poisson(true/period).
+This reproduces the sampling inaccuracies the paper identifies (§3.2): two
+pages with identical true rates receive different counts over short windows,
+and sparse-but-hot pages may briefly receive zero samples.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pebs_sample(true_counts: np.ndarray, period: float,
+                rng: np.random.Generator) -> np.ndarray:
+    """Observed per-page sample counts for one interval."""
+    lam = np.maximum(true_counts, 0.0) / float(period)
+    return rng.poisson(lam).astype(np.float64)

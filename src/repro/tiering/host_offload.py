@@ -1,0 +1,36 @@
+"""Slow-tier realization modes (DESIGN.md §2).
+
+``memkind`` places slow-pool buffers in JAX's ``pinned_host`` memory space
+(real host offload on TPU); ``buffer`` keeps them as ordinary device arrays
+(identical data plane; always compiles — the dry-run default)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def supports_memkind() -> bool:
+    try:
+        dev = jax.devices()[0]
+        kinds = getattr(dev, "addressable_memories", lambda: [])()
+        return any(getattr(m, "kind", "") == "pinned_host" for m in kinds)
+    except Exception:
+        return False
+
+
+def to_slow_tier(x, mode: str = "buffer", mesh=None):
+    """Place an array in the slow tier."""
+    if mode == "memkind" and supports_memkind():
+        sharding = NamedSharding(mesh, P(), memory_kind="pinned_host") \
+            if mesh is not None else \
+            jax.devices()[0].memory("pinned_host")
+        return jax.device_put(x, sharding)
+    return x
+
+
+def to_fast_tier(x, mode: str = "buffer", mesh=None):
+    if mode == "memkind" and supports_memkind():
+        sharding = NamedSharding(mesh, P(), memory_kind="device") \
+            if mesh is not None else jax.devices()[0].memory("device")
+        return jax.device_put(x, sharding)
+    return x

@@ -1,0 +1,58 @@
+"""Beyond-paper serving mode: ARMS-guided sparse paged attention.
+
+The paper places hot pages in the fast tier so that full attention is
+cheap; the step BEYOND the paper is to let the ARMS hot-set *define the
+attention working set*: attend only to (a) fast-resident pages (ARMS's
+top-k by attention mass — the pages that matter, by construction), (b) a
+recency window of the newest pages, and (c) the attention-sink page 0
+(StreamingLLM observation).  The cold slow-tier pages are SKIPPED, so both
+the slow-tier bandwidth AND the attention compute shrink by the cold-set
+fraction — tiering becomes a throughput optimization, not just capacity.
+
+Quality: on workloads where attention mass concentrates (the same skew
+ARMS exploits), the output approximates full attention; the approximation
+error is bounded by the skipped attention mass, which ARMS's own EWMA
+estimates — so the system can monitor its sparsification error online.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.tiering.paged_kv import PagedKV, PagedKVConfig, _gather_kv
+
+
+def sparse_attention_step(kv: PagedKV, q, pos, cfg: PagedKVConfig,
+                          recent_pages: int = 2):
+    """Decode attention over ONLY the hot working set.
+
+    q: [B, H, dh] -> (out [B,H,dh], page mass estimate [n_pages],
+    attended_fraction scalar).
+    """
+    B, H, dh = q.shape
+    page, n = cfg.page_size, cfg.n_pages
+    k, v = _gather_kv(kv)                           # [n, page, B, KV, dh]
+    KV = k.shape[3]
+    rep = H // KV
+
+    cur_page = pos // page
+    page_ids = jnp.arange(n)
+    attend = (kv.in_fast                                    # ARMS hot set
+              | (page_ids >= cur_page - recent_pages + 1)
+              & (page_ids <= cur_page)                      # recency window
+              | (page_ids == 0))                            # attention sink
+
+    kf = k.transpose(2, 0, 1, 3, 4).reshape(B, n * page, KV, dh)
+    vf = v.transpose(2, 0, 1, 3, 4).reshape(B, n * page, KV, dh)
+    qg = q.reshape(B, KV, rep, dh)
+    s = jnp.einsum("bkrd,bskd->bkrs", qg, kf).astype(jnp.float32)
+    s *= dh ** -0.5
+    tok_ok = (jnp.repeat(attend, page)[None]
+              & (jnp.arange(n * page) <= pos)[None])
+    s = jnp.where(tok_ok[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkrs,bskd->bkrd", p.astype(vf.dtype), vf)
+    mass = p.reshape(B, KV, rep, n, page).sum(axis=(0, 1, 2, 4))
+    frac = attend.sum() / jnp.maximum((jnp.arange(n) * page <= pos).sum(),
+                                      1)
+    return out.reshape(B, H, dh), mass, frac

@@ -1,0 +1,53 @@
+"""Tracing-time mesh context for internal activation-sharding constraints.
+
+Layer code (e.g. the MoE dispatch) sometimes needs constraints on tensors
+whose layout the generic batch-dim hook cannot describe (expert buffers).
+The step factories enter ``use_mesh(mesh)`` while tracing; ``constrain``
+is a no-op outside the context or when an axis is absent from the mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+_MESH = contextvars.ContextVar("repro_act_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def constrain(x, spec_entries):
+    """spec_entries: tuple of axis names / tuples / None per dim; entries
+    naming axes absent from the mesh (or dims not divisible) collapse to
+    None."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+
+    def ok(entry, dim):
+        if entry is None:
+            return None
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        if not all(a in names for a in axes):
+            return None
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        return entry if dim % size == 0 and dim >= size else None
+
+    spec = PartitionSpec(*(ok(e, d) for e, d in zip(spec_entries, x.shape)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,34 @@
+"""Pytree dataclass helpers.
+
+``pytree_dataclass`` registers a frozen dataclass whose fields are ALL jax data
+(arrays / scalars) so instances flow through jit/scan/vmap.  ``static_dataclass``
+is a frozen, hashable dataclass used for configuration objects that are closed
+over (static) in jitted functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def _replace(self, **kw):
+    return dataclasses.replace(self, **kw)
+
+
+def pytree_dataclass(cls=None):
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        fields = [f.name for f in dataclasses.fields(c)]
+        jax.tree_util.register_dataclass(c, data_fields=fields, meta_fields=[])
+        c.replace = _replace
+        return c
+
+    return wrap(cls) if cls is not None else wrap
+
+
+def static_dataclass(cls=None):
+    def wrap(c):
+        return dataclasses.dataclass(frozen=True)(c)
+
+    return wrap(cls) if cls is not None else wrap

@@ -1,0 +1,39 @@
+"""End-to-end dry-run integration test (deliverable e, CI-scale).
+
+Runs the REAL dryrun module in a subprocess (so the 512 forced host
+devices don't leak into this process) for one small cell on both
+production meshes and validates the artifact schema + roofline terms.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.parametrize("mesh", ["pod1", "pod2"])
+def test_dryrun_cell_compiles_and_reports(tmp_path, mesh):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", "stablelm-1.6b", "--shape", "decode_32k",
+           "--mesh", mesh, "--out", str(tmp_path)]
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+    env.update({k: v for k, v in os.environ.items()
+                if k not in env and k != "XLA_FLAGS"})
+    res = subprocess.run(cmd, capture_output=True, text=True, timeout=600,
+                         env=env)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    rec = json.loads(
+        (tmp_path / f"stablelm-1.6b__decode_32k__{mesh}.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["chips"] == (512 if mesh == "pod2" else 256)
+    r = rec["roofline"]
+    for term in ("compute_s", "memory_s", "collective_s"):
+        assert r[term] >= 0.0
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert rec["model_flops"] > 0
+    assert rec["collectives"]["_total"] >= 0
+    assert rec["memory_analysis"]["temp_size_in_bytes"] > 0

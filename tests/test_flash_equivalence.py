@@ -1,0 +1,76 @@
+"""Equivalence of the XLA flash-pattern attention vs the naive path
+(§Perf iteration A4) and vs the Pallas flash kernel's ref oracle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.models import xla_flash
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("B,H,S,dh,block", [(2, 4, 256, 64, 64),
+                                            (1, 2, 512, 32, 128)])
+def test_flash_sdpa_matches_naive(B, H, S, dh, block, causal):
+    rng = np.random.default_rng(S + dh)
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    got = xla_flash.flash_sdpa(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), dh ** -0.5, causal=causal, block=block)
+    got = got.transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_sdpa_windowed():
+    rng = np.random.default_rng(0)
+    B, H, S, dh = 1, 2, 256, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    ref = flash_attention_ref(q, k, v, causal=True, window=64)
+    got = xla_flash.flash_sdpa(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), dh ** -0.5, causal=True, window=64,
+        block=64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_full_flash_path_matches_naive(monkeypatch):
+    """Force the flash path at small S and compare whole-block outputs."""
+    from repro.configs import registry
+    from repro.models import attention as A
+
+    cfg = registry.reduced(registry.get_arch("granite-8b"))
+    rng = jax.random.PRNGKey(0)
+    p = A.gqa_init(rng, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    ref, _ = A.gqa_full(p, x, cfg)
+    monkeypatch.setattr(xla_flash, "FLASH_MIN_SEQ", 16)
+    monkeypatch.setattr(xla_flash, "BLOCK", 16)
+    got, _ = A.gqa_full(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mla_full_flash_path_matches_naive(monkeypatch):
+    from repro.configs import registry
+    from repro.models import attention as A
+
+    cfg = registry.reduced(registry.get_arch("deepseek-v2-236b"))
+    rng = jax.random.PRNGKey(0)
+    p = A.mla_init(rng, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    ref, _ = A.mla_full(p, x, cfg)
+    monkeypatch.setattr(xla_flash, "FLASH_MIN_SEQ", 16)
+    monkeypatch.setattr(xla_flash, "BLOCK", 16)
+    got, _ = A.mla_full(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)

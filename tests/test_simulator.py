@@ -1,0 +1,142 @@
+"""Simulator + baseline-policy behaviour tests (paper §3, §7 analogues)."""
+import numpy as np
+import pytest
+
+from repro.baselines.arms_policy import ARMSPolicy
+from repro.baselines.hemem import HeMemPolicy
+from repro.baselines.memtis import MemtisPolicy
+from repro.baselines.static import AllSlowPolicy, OraclePolicy
+from repro.baselines.tpp import TPPPolicy
+from repro.simulator import workloads
+from repro.simulator.engine import run
+from repro.simulator.machine import NUMA, PMEM_LARGE, interval_time
+
+T, N, K = 120, 512, 64
+
+
+def _trace(name):
+    return workloads.make(name, T=T, n=N)
+
+
+class TestMachineModel:
+    def test_fast_placement_is_faster(self):
+        slow = interval_time(PMEM_LARGE, 0, 1e7, 0, 0).wall_s
+        fast = interval_time(PMEM_LARGE, 1e7, 0, 0, 0).wall_s
+        assert fast < slow
+
+    def test_migration_traffic_costs_time(self):
+        base = interval_time(PMEM_LARGE, 1e6, 1e7, 0, 0).wall_s
+        loaded = interval_time(PMEM_LARGE, 1e6, 1e7, 200, 200).wall_s
+        assert loaded > base
+
+    def test_numa_has_milder_slow_tier(self):
+        p = interval_time(PMEM_LARGE, 0, 1e7, 0, 0).wall_s
+        m = interval_time(NUMA, 0, 1e7, 0, 0).wall_s
+        assert m < p  # paper §7.3: higher far-memory bandwidth on NUMA
+
+
+class TestWorkloads:
+    @pytest.mark.parametrize("name", sorted(workloads.WORKLOADS))
+    def test_trace_shape_and_work(self, name):
+        tr = _trace(name)
+        assert tr.shape == (T, N)
+        assert (tr >= 0).all()
+        busy = tr.sum(axis=1) > 0.5 * workloads.DEFAULT_WORK
+        assert busy.mean() > 0.4  # most intervals carry full work
+
+    def test_deterministic(self):
+        a, b = _trace("gups"), _trace("gups")
+        np.testing.assert_array_equal(a, b)
+
+
+class TestEngine:
+    def test_deterministic_runs(self):
+        tr = _trace("btree")
+        r1 = run(HeMemPolicy(), tr, PMEM_LARGE, K, seed=7)
+        r2 = run(HeMemPolicy(), tr, PMEM_LARGE, K, seed=7)
+        assert r1.exec_time_s == r2.exec_time_s
+        assert r1.promotions == r2.promotions
+
+    def test_all_slow_never_migrates(self):
+        r = run(AllSlowPolicy(), _trace("gups"), PMEM_LARGE, K)
+        assert r.promotions == r.demotions == 0
+        assert r.fast_hit_frac == 0.0
+
+    def test_oracle_is_best(self):
+        tr = _trace("silo-ycsb")
+        oracle = run(OraclePolicy(), tr, PMEM_LARGE, K)
+        for pol in (HeMemPolicy(), MemtisPolicy(), TPPPolicy(), ARMSPolicy()):
+            res = run(pol, tr, PMEM_LARGE, K)
+            assert oracle.exec_time_s <= res.exec_time_s * 1.05
+
+    def test_capacity_never_exceeded(self):
+        class Greedy(HeMemPolicy):
+            migration_limit = 10 ** 9
+
+        tr = _trace("gups")
+        r = run(Greedy(hot_threshold=1, cooling_threshold=1000,
+                       migration_period=1), tr, PMEM_LARGE, K)
+        # engine caps promotions at capacity: fast hits possible but bounded
+        assert r.promotions <= T * K
+
+
+class TestPaperBehaviours:
+    """Qualitative behaviours from the paper's analysis (§3, §7).
+
+    These run at the benchmark scale (n=1024+ pages) where the paper's
+    pathologies manifest; the tiny scale above is for engine mechanics.
+    """
+
+    def test_arms_beats_default_hemem(self):
+        """Fig. 7: ARMS > default HeMem (geomean over a workload subset)."""
+        sp = []
+        for wl in ("gups", "btree", "gapbs-bc"):
+            tr = workloads.make(wl, T=250, n=1024)
+            h = run(HeMemPolicy(), tr, PMEM_LARGE, 128)
+            a = run(ARMSPolicy(), tr, PMEM_LARGE, 128)
+            sp.append(h.exec_time_s / a.exec_time_s)
+        assert float(np.exp(np.mean(np.log(sp)))) > 1.2
+
+    def test_tpp_migrates_most(self):
+        """Fig. 10: TPP performs an extremely high number of migrations."""
+        tr = _trace("xsbench")
+        tpp = run(TPPPolicy(), tr, PMEM_LARGE, K)
+        arms = run(ARMSPolicy(), tr, PMEM_LARGE, K)
+        assert tpp.promotions > 3 * arms.promotions
+
+    def test_arms_few_wasteful_migrations(self):
+        """§7.2: multi-round filtering + cost/benefit suppress waste."""
+        tr = _trace("xsbench")
+        tpp = run(TPPPolicy(), tr, PMEM_LARGE, K)
+        arms = run(ARMSPolicy(), tr, PMEM_LARGE, K)
+        assert arms.wasteful < 0.2 * max(tpp.wasteful, 1)
+
+    def test_memtis_infrequent_cooling_on_tpcc(self):
+        """§7.1: Memtis's static cooling period hurts 'latest' workloads."""
+        tr = _trace("silo-tpcc")
+        memtis = run(MemtisPolicy(), tr, PMEM_LARGE, K)
+        arms = run(ARMSPolicy(), tr, PMEM_LARGE, K)
+        assert arms.exec_time_s < memtis.exec_time_s
+
+    def test_arms_detects_hotset_change(self):
+        """Fig. 9: PHT flips ARMS into recency mode on a hot-set shift."""
+        tr = workloads.make("gups", T=250, n=1024)  # shift at t=150
+        arms = run(ARMSPolicy(), tr, PMEM_LARGE, 128)
+        assert arms.timeline_mode.max() == 1       # recency mode entered
+        assert arms.timeline_mode[140:180].max() == 1  # around the shift
+
+    def test_arms_robust_across_ratios(self):
+        """Fig. 13: ARMS >= default HeMem at every fast:slow ratio."""
+        tr = _trace("gups")
+        for ratio in (16, 8, 4, 2):
+            k = max(1, N // ratio)
+            h = run(HeMemPolicy(), tr, PMEM_LARGE, k)
+            a = run(ARMSPolicy(), tr, PMEM_LARGE, k)
+            assert a.exec_time_s <= h.exec_time_s * 1.05
+
+    def test_arms_works_on_numa_machine(self):
+        """§7.3: same policy, different hardware, no re-tuning."""
+        tr = _trace("btree")
+        h = run(HeMemPolicy(), tr, NUMA, K)
+        a = run(ARMSPolicy(), tr, NUMA, K)
+        assert a.exec_time_s <= h.exec_time_s * 1.02

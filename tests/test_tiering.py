@@ -1,0 +1,137 @@
+"""Tiering-integration tests: paged KV, expert tiering, embedding tiering.
+
+Key invariants: (a) tiered attention output == contiguous-cache oracle
+regardless of page placement; (b) every logical page lives in exactly one
+tier; (c) ARMS migrates hot pages/experts/rows into the fast tier.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.tiering import embedding_tiering as ET
+from repro.tiering import expert_tiering as XT
+from repro.tiering import paged_kv as PK
+
+CFG = PK.PagedKVConfig(page_size=8, n_pages=8, fast_pages=3, policy_every=4)
+B, KV, H, DH = 2, 2, 4, 16
+
+
+def _contiguous_attention(ks, vs, q, pos):
+    """Oracle: dense attention over the first pos+1 tokens."""
+    S = ks.shape[0]
+    rep = H // KV
+    qg = q.reshape(B, KV, rep, DH)
+    k = ks.transpose(1, 0, 2, 3)   # [B,S,KV,dh]
+    v = vs.transpose(1, 0, 2, 3)
+    s = jnp.einsum("bkrd,bskd->bkrs", qg, k).astype(jnp.float32)
+    s *= DH ** -0.5
+    s = jnp.where((jnp.arange(S) <= pos)[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bkrs,bskd->bkrd", p.astype(v.dtype),
+                      v).reshape(B, H, DH)
+
+
+class TestPagedKV:
+    def _drive(self, steps, seed=0):
+        rng = np.random.default_rng(seed)
+        kv = PK.init_paged_kv(CFG, B, KV, DH, dtype=jnp.float32)
+        S = CFG.page_size * CFG.n_pages
+        ks_ref = np.zeros((S, B, KV, DH), np.float32)
+        vs_ref = np.zeros((S, B, KV, DH), np.float32)
+        outs, oracle = [], []
+        for t in range(steps):
+            q = jnp.asarray(rng.standard_normal((B, H, DH)), jnp.float32)
+            k_new = jnp.asarray(rng.standard_normal((B, KV, DH)),
+                                jnp.float32)
+            v_new = jnp.asarray(rng.standard_normal((B, KV, DH)),
+                                jnp.float32)
+            ks_ref[t], vs_ref[t] = k_new, v_new
+            out, kv, plan = PK.serve_decode_step(kv, q, k_new, v_new,
+                                                 jnp.int32(t), CFG)
+            outs.append(np.asarray(out))
+            oracle.append(np.asarray(_contiguous_attention(
+                jnp.asarray(ks_ref), jnp.asarray(vs_ref), q, t)))
+        return kv, np.stack(outs), np.stack(oracle)
+
+    def test_attention_matches_contiguous_oracle(self):
+        """Placement must never change attention output."""
+        kv, got, want = self._drive(40)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_single_residency_invariant(self):
+        kv, _, _ = self._drive(48)
+        in_fast = np.asarray(kv.in_fast)
+        slots = np.asarray(kv.slot)
+        fast_slots = slots[in_fast]
+        assert len(set(fast_slots.tolist())) == len(fast_slots)
+        assert in_fast.sum() <= CFG.fast_pages
+
+    def test_hot_pages_get_promoted(self):
+        """With causal decode the early pages accumulate attention mass;
+        after enough steps some pages must be fast-resident."""
+        kv, _, _ = self._drive(64)
+        assert int(np.asarray(kv.in_fast).sum()) > 0
+
+
+class TestExpertTiering:
+    def test_hot_experts_promoted_and_weights_correct(self):
+        E, Kf, D, F = 8, 3, 16, 8
+        rng = np.random.default_rng(0)
+        wi = jnp.asarray(rng.standard_normal((E, D, 2 * F)), jnp.float32)
+        wo = jnp.asarray(rng.standard_normal((E, F, D)), jnp.float32)
+        cfg = XT.ExpertTierConfig(n_experts=E, fast_experts=Kf,
+                                  policy_every=1)
+        t = XT.init_expert_tier(cfg, wi, wo)
+        load = jnp.asarray([100, 90, 80, 1, 1, 1, 1, 1], jnp.float32)
+        for _ in range(6):
+            t, plan = XT.observe_and_policy(t, load, cfg)
+        in_fast = np.asarray(t.in_fast)
+        assert in_fast[:3].sum() == 3          # the 3 hot experts resident
+        assert in_fast.sum() <= Kf
+        wi_eff, wo_eff = XT.effective_weights(t)
+        np.testing.assert_allclose(np.asarray(wi_eff), np.asarray(wi),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(wo_eff), np.asarray(wo),
+                                   rtol=1e-6)
+
+    def test_bursty_expert_filtered(self):
+        """One-hit-wonder expert (single burst) must not displace steady
+        hot experts (multi-round filter, §4.3)."""
+        E, Kf = 8, 2
+        rng = np.random.default_rng(1)
+        wi = jnp.asarray(rng.standard_normal((E, 4, 8)), jnp.float32)
+        wo = jnp.asarray(rng.standard_normal((E, 4, 4)), jnp.float32)
+        cfg = XT.ExpertTierConfig(n_experts=E, fast_experts=Kf,
+                                  policy_every=1)
+        t = XT.init_expert_tier(cfg, wi, wo)
+        steady = jnp.asarray([50, 50, 0, 0, 0, 0, 0, 0], jnp.float32)
+        for _ in range(5):
+            t, _ = XT.observe_and_policy(t, steady, cfg)
+        burst = steady.at[7].set(500.0)
+        t, plan = XT.observe_and_policy(t, burst, cfg)   # single burst
+        assert not bool(t.in_fast[7])   # hot_age < 2: not promoted yet
+        for _ in range(4):
+            t, _ = XT.observe_and_policy(t, steady, cfg)
+        assert not bool(t.in_fast[7])   # burst faded: never promoted
+
+
+class TestEmbeddingTiering:
+    def test_zipf_hot_blocks_promoted(self):
+        V, D = 4096, 8
+        cfg = ET.EmbedTierConfig(vocab=V, row_block=256, fast_blocks=4,
+                                 policy_every=1)
+        rng = np.random.default_rng(2)
+        table = jnp.asarray(rng.standard_normal((V, D)), jnp.float32)
+        t = ET.init_embed_tier(cfg, table)
+        # zipf-ish ids concentrated in blocks 0-3
+        ids = jnp.asarray(rng.integers(0, 1024, (64,)), jnp.int32)
+        for _ in range(6):
+            emb, hits, t = ET.lookup(t, ids, cfg)
+            t, _ = ET.policy(t, cfg)
+        emb, hits, t = ET.lookup(t, ids, cfg)
+        assert float(hits) == 1.0      # all lookups hit the fast tier
+        np.testing.assert_allclose(
+            np.asarray(emb), np.asarray(jnp.take(table, ids, axis=0)))
