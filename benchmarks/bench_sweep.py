@@ -1,0 +1,166 @@
+"""Record the tuning/sweep before-vs-after timings into BENCH_tuning.json.
+
+Three tiers of "before":
+  * ``seed``:    the pre-PR ARMS simulator path — per-interval device syncs
+    in ``ARMSPolicy.step`` (``int(policy_every(state.mode))`` +
+    ``float(sampling_period(...))`` every simulator interval) and the
+    per-interval oracle ``argpartition`` in the engine loop.  Replicated
+    here as ``SeedSyncARMSPolicy``/``_seed_engine_run`` so the number stays
+    reproducible after the optimized code replaced it.
+  * ``sequential``: the post-PR numpy loop (host-cached cadence, hoisted
+    oracle) replaying the sweep one simulation at a time.
+  * ``batched``: the compiled lax.scan + vmap sweep (scan_engine).
+
+Also times ``tune_hemem`` (the paper's tuning study; HeMem is a numpy
+policy, so it benefits only from the engine-side oracle hoist).
+
+Usage: PYTHONPATH=src:. python benchmarks/bench_sweep.py [--out BENCH_tuning.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.baselines.arms_policy import ARMSPolicy
+from repro.core import policy_every, sampling_period
+from repro.core.state import ARMSConfig
+from repro.simulator import scan_engine, tuning, workloads
+from repro.simulator.engine import run
+from repro.simulator.machine import PMEM_LARGE, interval_time
+from repro.simulator.sampling import pebs_sample
+
+
+class SeedSyncARMSPolicy(ARMSPolicy):
+    """Pre-PR ARMSPolicy: device->host sync per simulator interval."""
+
+    def sampling_period(self):
+        return float(sampling_period(self.state.mode))
+
+    def step(self, observed, slow_bw_frac, app_bw_frac):
+        from repro.core import arms_step
+        from repro.core.scheduler import observe_migration_cost
+        self.t += 1
+        self.buf += observed
+        every = int(policy_every(self.state.mode))   # per-interval sync
+        if self.t % every:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        self.state, plan = arms_step(
+            self.state, self.buf / every, float(slow_bw_frac),
+            float(app_bw_frac), cfg=self.cfg, k=self.k)
+        self.buf[:] = 0.0
+        valid = np.asarray(plan.valid)
+        promote = np.asarray(plan.promote)[valid]
+        demote = np.asarray(plan.demote)[valid]
+        demote = demote[demote >= 0]
+        if len(promote):
+            self.state = observe_migration_cost(
+                self.state, self._promo_us, self._demo_us, self.cfg)
+        return promote.astype(np.int64), demote.astype(np.int64)
+
+    @property
+    def mode(self):
+        return int(self.state.mode)
+
+
+def _seed_engine_run(policy, trace, machine, k, seed=0):
+    """Pre-PR engine loop: per-interval oracle argpartition, f64 cost model."""
+    T, n = trace.shape
+    rng = np.random.default_rng(seed)
+    policy.reset(n, k, machine)
+    in_fast = np.zeros(n, bool)
+    slow_bw_frac, app_bw_frac = 1.0, 0.0
+    exec_time = 0.0
+    for t in range(T):
+        true = trace[t]
+        observed = pebs_sample(true, policy.sampling_period(), rng)
+        promote, demote = policy.step(observed, slow_bw_frac, app_bw_frac)
+        demote = np.asarray(demote, np.int64)
+        promote = np.asarray(promote, np.int64)
+        demote = demote[in_fast[demote]]
+        in_fast[demote] = False
+        promote = promote[~in_fast[promote]]
+        room = k - int(in_fast.sum())
+        promote = promote[:room]
+        in_fast[promote] = True
+        acc_fast = float(true[in_fast].sum())
+        acc_slow = float(true.sum()) - acc_fast
+        out = interval_time(machine, acc_fast, acc_slow,
+                            len(promote), len(demote))
+        exec_time += out.wall_s
+        slow_bw_frac = acc_slow / max(acc_fast + acc_slow, 1e-9)
+        app_bw_frac = out.app_bw_frac
+        np.argpartition(true, -k)  # per-interval oracle top-k (seed code)
+    return exec_time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_tuning.json")
+    ap.add_argument("--budget", type=int, default=24)
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--T", type=int, default=512)
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables
+
+    n, T, budget = args.n, args.T, args.budget
+    k = n // 8
+    trace = workloads.make("gups", T=T, n=n)
+    cfgs = tuning.sample_arms_configs(budget)
+
+    print(f"[bench_sweep] ARMS config sweep, gups n={n} T={T} k={k} "
+          f"budget={budget}", flush=True)
+    # warm jit caches so the seed-replica loop isn't charged jax warmup
+    _seed_engine_run(SeedSyncARMSPolicy(), trace[:32], PMEM_LARGE, k)
+    t0 = time.time()
+    for cfg in cfgs:
+        _seed_engine_run(SeedSyncARMSPolicy(ARMSConfig(**cfg)), trace,
+                         PMEM_LARGE, k)
+    seed_style_s = round(time.time() - t0, 3)
+    print(f"[bench_sweep] pre-PR (per-interval syncs) sequential: "
+          f"{seed_style_s}s", flush=True)
+
+    rec = paper_tables.bench_arms_sweep(budget=budget, n=n, T=T)
+    rec["config_sweep_seed_style_sequential_s"] = seed_style_s
+    rec["config_sweep_speedup_vs_seed"] = round(
+        seed_style_s / rec["config_sweep_batched_warm_s"], 2)
+    rec["config_sweep_speedup_vs_seed_jnp"] = round(
+        seed_style_s / rec["config_sweep_batched_warm_jnp_s"], 2)
+
+    # tune_hemem (the paper's tuning study) before/after: only the oracle
+    # hoist changed on this path; timed at the benchmark-suite scale.
+    hm_trace = workloads.make("gups", T=300, n=2048)
+    tuning.tune_hemem(hm_trace[:32], PMEM_LARGE, 256, budget=2)  # warm
+    t0 = time.time()
+    tuning.tune_hemem(hm_trace, PMEM_LARGE, 256, budget=budget)
+    rec["tune_hemem_after_s"] = round(time.time() - t0, 3)
+
+    out = dict(
+        description="Tuning/sweep bench before vs after the compiled "
+                    "lax.scan+vmap simulation engine (PR 1)",
+        machine="pmem-large model; CI container CPU (2 cores)",
+        notes=[
+            "'seed_style' replays the pre-PR code path: per-interval "
+            "device syncs in ARMSPolicy.step and per-interval oracle "
+            "argpartition in the engine loop.",
+            "'sequential' is the post-PR numpy reference loop (those "
+            "satellite fixes applied), one simulation per config.",
+            "'batched' runs the whole sweep as one compiled lax.scan "
+            "batched over configs; 'warm' excludes the one-off compile.",
+            "'jnp' uses ARMSConfig(use_score_kernel=False): the fused "
+            "Pallas score kernel runs in interpret mode off-TPU, which "
+            "costs extra inside batched sweeps.",
+        ],
+        **rec,
+    )
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -158,6 +158,89 @@ def bench_numa_machine():
           f"{geomean(sp):.2f}x", ">= 1.0x geomean", geomean(sp) >= 1.0)
 
 
+# -------------------------------------------- batched sweeps (scan engine)
+def bench_arms_sweep(budget: int = 24, n_seeds: int = 8,
+                     n: int = 4096, T: int = 512):
+    """Batched lax.scan+vmap ARMS sweeps vs the sequential numpy loop.
+
+    Runs at the acceptance scale (n_pages >= 4096, T >= 512).  Three
+    numbers per sweep: sequential numpy loop, batched cold (includes the
+    one-off compile), batched warm.  Returns a dict for BENCH_tuning.json.
+    """
+    import time
+
+    from repro.baselines.arms_policy import ARMSPolicy
+    from repro.core.state import ARMSConfig
+    from repro.simulator import scan_engine, workloads
+
+    trace = workloads.make("gups", T=T, n=n)
+    k = n // 8
+    rec = dict(workload="gups", n_pages=n, T=T, k=k, budget=budget,
+               n_seeds=n_seeds)
+
+    # --- config sweep (the tuning study) ---
+    cfgs = tuning.sample_arms_configs(budget)
+    t0 = time.time()
+    for cfg in cfgs:
+        run(ARMSPolicy(ARMSConfig(**cfg)), trace, PMEM_LARGE, k, seed=0)
+    rec["config_sweep_sequential_s"] = round(time.time() - t0, 3)
+
+    overrides = {key: [c[key] for c in cfgs] for key in tuning.ARMS_SPACE}
+    t0 = time.time()
+    scan_engine.sweep_arms_configs(trace, PMEM_LARGE, k, overrides)
+    rec["config_sweep_batched_cold_s"] = round(time.time() - t0, 3)
+    t0 = time.time()
+    scan_engine.sweep_arms_configs(trace, PMEM_LARGE, k, overrides)
+    rec["config_sweep_batched_warm_s"] = round(time.time() - t0, 3)
+
+    # same sweep with the pure-jnp score path (the Pallas kernel runs in
+    # interpret mode off-TPU, which costs extra under batching)
+    jnp_cfg = ARMSConfig(use_score_kernel=False)
+    scan_engine.sweep_arms_configs(trace, PMEM_LARGE, k, overrides,
+                                   base_cfg=jnp_cfg)
+    t0 = time.time()
+    scan_engine.sweep_arms_configs(trace, PMEM_LARGE, k, overrides,
+                                   base_cfg=jnp_cfg)
+    rec["config_sweep_batched_warm_jnp_s"] = round(time.time() - t0, 3)
+
+    # --- seed sweep ---
+    seeds = list(range(n_seeds))
+    t0 = time.time()
+    for s in seeds:
+        run(ARMSPolicy(), trace, PMEM_LARGE, k, seed=s)
+    rec["seed_sweep_sequential_s"] = round(time.time() - t0, 3)
+    t0 = time.time()
+    scan_engine.sweep_seeds(trace, PMEM_LARGE, k, seeds)
+    rec["seed_sweep_batched_cold_s"] = round(time.time() - t0, 3)
+    t0 = time.time()
+    scan_engine.sweep_seeds(trace, PMEM_LARGE, k, seeds)
+    rec["seed_sweep_batched_warm_s"] = round(time.time() - t0, 3)
+
+    sp_cfg = rec["config_sweep_sequential_s"] / \
+        rec["config_sweep_batched_warm_s"]
+    sp_cfg_jnp = rec["config_sweep_sequential_s"] / \
+        rec["config_sweep_batched_warm_jnp_s"]
+    sp_seed = rec["seed_sweep_sequential_s"] / \
+        rec["seed_sweep_batched_warm_s"]
+    rec["config_sweep_speedup"] = round(sp_cfg, 2)
+    rec["config_sweep_speedup_jnp"] = round(sp_cfg_jnp, 2)
+    rec["seed_sweep_speedup"] = round(sp_seed, 2)
+    emit(f"arms_sweep.config.n{n}",
+         rec["config_sweep_batched_warm_s"] * 1e6,
+         f"seq={rec['config_sweep_sequential_s']}s;"
+         f"speedup={sp_cfg:.2f}x;jnp_path={sp_cfg_jnp:.2f}x")
+    emit(f"arms_sweep.seeds.n{n}",
+         rec["seed_sweep_batched_warm_s"] * 1e6,
+         f"seq={rec['seed_sweep_sequential_s']}s;speedup={sp_seed:.2f}x")
+    # conservative CI gate (the recorded BENCH_tuning.json documents the
+    # full before/after including the pre-PR per-interval-sync baseline,
+    # which is what the >=5x acceptance figure is measured against)
+    claim("batched ARMS sweep beats sequential numpy loop",
+          f"{max(sp_cfg, sp_cfg_jnp):.2f}x", ">= 2x (5x vs pre-PR baseline)",
+          max(sp_cfg, sp_cfg_jnp) >= 2.0)
+    return rec
+
+
 # --------------------------------------------------------- §5/§6 overheads
 def bench_overheads():
     """ARMS controller cost per policy interval + metadata bytes/page."""

@@ -20,6 +20,7 @@ def main() -> None:
     common.header()
     if not args.quick:
         pt.bench_tuning_study()
+        pt.bench_arms_sweep()
     pt.bench_main_comparison()
     pt.bench_migrations()
     pt.bench_adaptivity()

@@ -4,15 +4,24 @@ Bridges the pure-JAX controller into the numpy simulation loop: accumulates
 sampled counts between policy invocations (500 ms / 100 ms cadence expressed
 in 100 ms simulator intervals), feeds slow-tier bandwidth to the PHT, and
 executes the bandwidth-aware batched migration plan.
+
+The policy cadence and sampling period are tracked on the HOST, refreshed
+from the returned state once per policy invocation: ``mode`` only changes
+inside ``arms_step``, so polling ``policy_every(state.mode)`` every simulator
+interval (as earlier versions did) forced a device->host sync per interval
+for a value that could not have changed.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.baselines.base import Policy
-from repro.core import (ARMSConfig, arms_step, init_state, policy_every,
-                        sampling_period)
+from repro.core import ARMSConfig, arms_step, init_state
+from repro.core.controller import (POLICY_EVERY_HISTORY, POLICY_EVERY_RECENCY,
+                                   SAMPLING_PERIOD_HISTORY,
+                                   SAMPLING_PERIOD_RECENCY)
 from repro.core.scheduler import observe_migration_cost
+from repro.core.state import MODE_HISTORY, MODE_RECENCY
 from repro.simulator import machine as machine_mod
 
 
@@ -35,21 +44,33 @@ class ARMSPolicy(Policy):
         self._machine = machine
         self._promo_us = machine_mod.promo_page_us(machine)
         self._demo_us = machine_mod.demo_page_us(machine)
+        self._set_mode(MODE_HISTORY)
+
+    def _set_mode(self, mode: int):
+        """Host-side cadence cache, refreshed once per policy invocation."""
+        self._mode = int(mode)
+        recency = self._mode == MODE_RECENCY
+        self._every = POLICY_EVERY_RECENCY if recency else POLICY_EVERY_HISTORY
+        self._period = float(SAMPLING_PERIOD_RECENCY if recency
+                             else SAMPLING_PERIOD_HISTORY)
 
     def sampling_period(self):
-        return float(sampling_period(self.state.mode))
+        return self._period
 
     def step(self, observed, slow_bw_frac, app_bw_frac):
         self.t += 1
         self.buf += observed
-        every = int(policy_every(self.state.mode))
+        every = self._every
         if self.t % every:
             return np.empty(0, np.int64), np.empty(0, np.int64)
 
         # normalize accumulated counts to per-interval rate so the EWMA scale
-        # is mode-independent (500ms vs 100ms policy cadence, §5).
+        # is mode-independent (500ms vs 100ms policy cadence, §5).  f32 in,
+        # f32 divide: the controller computes in f32 either way, and dividing
+        # after the cast keeps this bitwise-aligned with the scan engine.
+        counts = self.buf.astype(np.float32) / np.float32(every)
         self.state, plan = arms_step(
-            self.state, self.buf / every, float(slow_bw_frac),
+            self.state, counts, float(slow_bw_frac),
             float(app_bw_frac), cfg=self.cfg, k=self.k)
         self.buf[:] = 0.0
 
@@ -60,8 +81,9 @@ class ARMSPolicy(Policy):
         if len(promote):   # §4.3: self-calibrating migration-cost feedback
             self.state = observe_migration_cost(
                 self.state, self._promo_us, self._demo_us, self.cfg)
+        self._set_mode(int(self.state.mode))
         return promote.astype(np.int64), demote.astype(np.int64)
 
     @property
     def mode(self) -> int:
-        return int(self.state.mode)
+        return self._mode

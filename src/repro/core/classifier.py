@@ -37,12 +37,20 @@ def score_weights(cfg: ARMSConfig, mode):
 
 def update_scores(state: TieringState, access_counts, cfg: ARMSConfig,
                   mode) -> TieringState:
-    """Algorithm 1 lines 1-6: EWMA + hotness score update (vectorized)."""
+    """Algorithm 1 lines 1-6: EWMA + hotness score update (vectorized).
+
+    Routed through the fused Pallas kernel (kernels/score_update) unless
+    ``cfg.use_score_kernel`` is False; both paths compute the identical f32
+    formula, so they are interchangeable numerically.
+    """
+    from repro.kernels.score_update.ops import score_update
+
     x = jnp.asarray(access_counts, jnp.float32)
-    ewma_s = cfg.alpha_s * x + (1.0 - cfg.alpha_s) * state.ewma_s
-    ewma_l = cfg.alpha_l * x + (1.0 - cfg.alpha_l) * state.ewma_l
     w_s, w_l = score_weights(cfg, mode)
-    score = w_s * ewma_s + w_l * ewma_l
+    ewma_s, ewma_l, score = score_update(
+        state.ewma_s, state.ewma_l, x,
+        alpha_s=cfg.alpha_s, alpha_l=cfg.alpha_l, w_s=w_s, w_l=w_l,
+        use_kernel=bool(getattr(cfg, "use_score_kernel", True)))
     return state.replace(ewma_s=ewma_s, ewma_l=ewma_l,
                          prev_score=state.score, score=score)
 

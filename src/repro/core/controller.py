@@ -27,7 +27,7 @@ from repro.core.state import (MODE_HISTORY, MODE_RECENCY, ARMSConfig,
 
 __all__ = [
     "ARMSConfig", "TieringState", "MigrationPlan", "init_state", "arms_step",
-    "sampling_period", "policy_every",
+    "arms_step_impl", "sampling_period", "policy_every",
 ]
 
 # §5: PEBS sampling period 10k default, 5k in recency mode.
@@ -48,10 +48,15 @@ def policy_every(mode):
                      POLICY_EVERY_HISTORY)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "k"))
-def arms_step(state: TieringState, access_counts, slow_bw_frac, app_bw_frac,
-              *, cfg: ARMSConfig, k: int):
-    """One ARMS policy interval.
+def arms_step_impl(state: TieringState, access_counts, slow_bw_frac,
+                   app_bw_frac, *, cfg: ARMSConfig, k: int):
+    """One ARMS policy interval (untraced body — see ``arms_step``).
+
+    This un-jitted entry point exists for callers that inline the controller
+    into a larger compiled program (the lax.scan simulation engine, vmapped
+    tuning sweeps).  There ``cfg``'s *float* fields may be traced arrays —
+    e.g. a batch of (alpha_s, noise_z, ...) knob settings swept under vmap —
+    while the shape-determining int fields (``bs_max``) stay static.
 
     Args:
       state: TieringState over n_pages.
@@ -107,3 +112,12 @@ def arms_step(state: TieringState, access_counts, slow_bw_frac, app_bw_frac,
                                 cfg)
     state = scheduler.apply_plan(state, plan)
     return state, plan
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def arms_step(state: TieringState, access_counts, slow_bw_frac, app_bw_frac,
+              *, cfg: ARMSConfig, k: int):
+    """Jitted ``arms_step_impl`` (cfg/k static) — the standalone entry point
+    used by the numpy simulator policy and the tiering integrations."""
+    return arms_step_impl(state, access_counts, slow_bw_frac, app_bw_frac,
+                          cfg=cfg, k=k)

@@ -57,6 +57,9 @@ class ARMSConfig:
     migrate_cost_alpha: float = 0.3  # EWMA for observed migration latencies
     init_promo_cost_us: float = 50.0  # prior for a 2MB-page-equivalent move
     init_demo_cost_us: float = 50.0
+    # Alg. 1 hot path: fused Pallas score-update kernel (interpret-mode on
+    # non-TPU backends).  Set False to fall back to the pure-jnp reference.
+    use_score_kernel: bool = True
 
     @property
     def delta_latency(self) -> float:

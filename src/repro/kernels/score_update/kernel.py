@@ -5,6 +5,11 @@ across layers x sequences); this fuses the three elementwise passes of
 Alg. 1 into one VMEM-resident sweep (one read of each EWMA + the counts,
 one write of each output) — memory-bound, so fusion is the whole win.
 Tiles are (8, 512) f32 over a 2-D folded view of the page array.
+
+The smoothing/weight scalars arrive as a (4,) f32 SMEM operand rather than
+compile-time constants: on the controller's real path the score weights are
+mode-dependent traced values (recency vs history, §4.2), and tuning sweeps
+vmap over them — so they must be data, not static kwargs.
 """
 from __future__ import annotations
 
@@ -13,12 +18,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 ROWS, COLS = 8, 512
 
 
-def _kernel(s_ref, l_ref, c_ref, s_out, l_out, score_out,
-            *, alpha_s, alpha_l, w_s, w_l):
+def _kernel(p_ref, s_ref, l_ref, c_ref, s_out, l_out, score_out):
+    alpha_s, alpha_l, w_s, w_l = p_ref[0], p_ref[1], p_ref[2], p_ref[3]
     c = c_ref[...]
     s = alpha_s * c + (1 - alpha_s) * s_ref[...]
     ll = alpha_l * c + (1 - alpha_l) * l_ref[...]
@@ -27,9 +33,7 @@ def _kernel(s_ref, l_ref, c_ref, s_out, l_out, score_out,
     score_out[...] = w_s * s + w_l * ll
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("alpha_s", "alpha_l", "w_s", "w_l",
-                                    "interpret"))
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def score_update_kernel(ewma_s, ewma_l, counts, *, alpha_s, alpha_l, w_s,
                         w_l, interpret: bool = True):
     n = ewma_s.shape[0]
@@ -40,16 +44,17 @@ def score_update_kernel(ewma_s, ewma_l, counts, *, alpha_s, alpha_l, w_s,
     def fold(x):
         return jnp.pad(x, (0, pad)).reshape(n_pad // COLS, COLS)
 
+    params = jnp.stack([jnp.asarray(v, jnp.float32)
+                        for v in (alpha_s, alpha_l, w_s, w_l)])
     grid = (n_pad // tile,)
     spec = pl.BlockSpec((ROWS, COLS), lambda i: (i, 0))
     outs = pl.pallas_call(
-        functools.partial(_kernel, alpha_s=alpha_s, alpha_l=alpha_l,
-                          w_s=w_s, w_l=w_l),
+        _kernel,
         grid=grid,
-        in_specs=[spec, spec, spec],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), spec, spec, spec],
         out_specs=[spec, spec, spec],
         out_shape=[jax.ShapeDtypeStruct((n_pad // COLS, COLS), jnp.float32)
                    for _ in range(3)],
         interpret=interpret,
-    )(fold(ewma_s), fold(ewma_l), fold(counts))
+    )(params, fold(ewma_s), fold(ewma_l), fold(counts))
     return tuple(o.reshape(n_pad)[:n] for o in outs)

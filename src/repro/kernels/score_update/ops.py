@@ -1,4 +1,10 @@
-"""jit'd public wrapper for the fused ARMS score update."""
+"""Public wrapper for the fused ARMS score update.
+
+This is the controller's real hot path: ``core.classifier.update_scores``
+routes through here (kernel by default, interpret-mode on non-TPU backends;
+``use_kernel=False`` selects the pure-jnp reference — the escape hatch
+``ARMSConfig.use_score_kernel=False`` flips at the config level).
+"""
 from __future__ import annotations
 
 import jax

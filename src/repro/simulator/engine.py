@@ -44,12 +44,55 @@ class SimResult:
                     fast_hit_frac=round(self.fast_hit_frac, 4))
 
 
+_CRN_SAMPLE = None
+
+
+def _crn_sampler():
+    """Module-cached jitted CRN sampler so compilation amortizes across
+    run() calls (a fresh jax.jit wrapper per call would retrace every
+    time)."""
+    global _CRN_SAMPLE
+    if _CRN_SAMPLE is None:
+        import jax
+
+        from repro.simulator.sampling import pebs_sample_from_uniform
+        _CRN_SAMPLE = jax.jit(pebs_sample_from_uniform)
+    return _CRN_SAMPLE
+
+
+def oracle_topk_masks(trace: np.ndarray, k: int) -> np.ndarray:
+    """[T, n] bool mask of each interval's true top-k pages, vectorized.
+
+    Hoisted out of the interval loop (one argpartition over the whole trace
+    instead of T per-interval ones) and shared with the scan engine so both
+    score recall against the identical oracle, ties included.
+    """
+    idx = np.argpartition(trace, -k, axis=1)[:, -k:]
+    mask = np.zeros(trace.shape, bool)
+    np.put_along_axis(mask, idx, True, axis=1)
+    return mask
+
+
 def run(policy: Policy, trace: np.ndarray, machine: MachineSpec, k: int,
-        seed: int = 0) -> SimResult:
+        seed: int = 0, sample_u: np.ndarray | None = None) -> SimResult:
+    """Replay ``trace`` under ``policy`` (numpy reference engine).
+
+    ``sample_u``: optional [T, n] uniform field switching PEBS sampling (and
+    the cost model) to the common-random-number path shared with the
+    compiled scan engine — both engines then see bitwise-identical noise and
+    interval arithmetic, which is what makes exact cross-engine equivalence
+    testable.  Default (None) keeps the original numpy Poisson sampling.
+    """
     T, n = trace.shape
     assert 0 < k <= n
     rng = np.random.default_rng(seed)
     policy.reset(n, k, machine)
+    oracle_mask = oracle_topk_masks(trace, k)
+    if sample_u is not None:
+        from repro.simulator import simjax
+        assert sample_u.shape == (T, n)
+        mp = simjax.machine_params(machine)
+        crn_sample = _crn_sampler()
 
     in_fast = np.zeros(n, bool)
     promoted_at = np.full(n, -(10 ** 9))
@@ -70,6 +113,10 @@ def run(policy: Policy, trace: np.ndarray, machine: MachineSpec, k: int,
         true = trace[t]
         if policy.wants_true_counts():
             observed = true
+        elif sample_u is not None:
+            observed = np.asarray(crn_sample(
+                sample_u[t], true.astype(np.float32),
+                np.float32(policy.sampling_period())), np.float64)
         else:
             observed = pebs_sample(true, policy.sampling_period(), rng)
 
@@ -95,11 +142,20 @@ def run(policy: Policy, trace: np.ndarray, machine: MachineSpec, k: int,
         tl_promos[t] = len(promote)
 
         # --- cost model ---
-        acc_fast = float(true[in_fast].sum())
-        acc_slow = float(true.sum()) - acc_fast
-        out = interval_time(machine, acc_fast, acc_slow,
-                            len(promote), len(demote))
-        wall = out.wall_s
+        if sample_u is not None:
+            # CRN mode: identical f32 arithmetic to the scan engine.
+            acc_fast, acc_slow, wall, slow_share, app_frac = (
+                float(v) for v in simjax.interval_accounting(
+                    mp, true.astype(np.float32), in_fast,
+                    float(len(promote)), float(len(demote))))
+        else:
+            acc_fast = float(true[in_fast].sum())
+            acc_slow = float(true.sum()) - acc_fast
+            out = interval_time(machine, acc_fast, acc_slow,
+                                len(promote), len(demote))
+            wall = out.wall_s
+            slow_share = acc_slow / max(acc_fast + acc_slow, 1e-9)
+            app_frac = out.app_bw_frac
         # policy-mechanism overhead charged to the application (e.g. TPP's
         # NUMA hint faults are taken on slow-tier accesses).
         extra_ns = getattr(policy, "slow_access_extra_ns", 0.0)
@@ -110,13 +166,12 @@ def run(policy: Policy, trace: np.ndarray, machine: MachineSpec, k: int,
         # saturates, utilization pegs at 1 and carries no signal, so we feed
         # the underlying quantity PHT is meant to detect (§4.2: "more memory
         # references go to the slow tier"): the slow-access share.
-        slow_bw_frac = acc_slow / max(acc_fast + acc_slow, 1e-9)
-        app_bw_frac = out.app_bw_frac
+        slow_bw_frac = slow_share
+        app_bw_frac = app_frac
 
         acc_fast_total += acc_fast
         acc_total += acc_fast + acc_slow
-        topk = np.argpartition(true, -k)[-k:]
-        recall_sum += float(in_fast[topk].sum()) / k
+        recall_sum += float(in_fast[oracle_mask[t]].sum()) / k
         tl_slow[t] = slow_bw_frac
         tl_hits[t] = acc_fast / max(acc_fast + acc_slow, 1e-9)
         tl_mode[t] = getattr(policy, "mode", 0)

@@ -1,0 +1,425 @@
+"""Compiled ``lax.scan`` simulation engine + vmapped tuning sweeps.
+
+The numpy engine (engine.py) replays a trace with a Python loop and one
+policy call per interval — fine as a *reference*, but host<->device
+round-trips and per-call dispatch dominate for the JAX-native ARMS policy,
+and tuning studies replay dozens of full simulations sequentially.  Here
+the entire replay — PEBS sampling, the ARMS controller, engine-side
+capacity/validity enforcement, the interval cost model, and
+wasteful/recall accounting — is one ``jax.lax.scan`` over intervals,
+compiled once and executed with zero per-interval host syncs.  On top of
+it:
+
+  * ``arms_sim``            — single run, SimResult-compatible output;
+  * ``sweep_seeds``         — batched over PRNG keys (sampling-noise
+    study: per-lane noise drawn from keys threaded through the carry);
+  * ``sweep_arms_configs``  — batched over ARMS float knobs (the
+    "From Good to Great"-style parameter sweep).  All configs share one
+    CRN noise field, so the two observation grids (history / recency
+    sampling period) are precomputed ONCE and broadcast — config lanes
+    pay zero sampling cost.
+
+Batching layout: sweep lanes live in an explicit leading axis of the scan
+carry rather than under an outer ``vmap`` of the whole simulation.  This
+matters: policy-cadence gating is a ``lax.cond`` on the *scalar*
+``any(lane fires)``, so on intervals where no lane's policy is due the
+controller (top-k ranking dominates the profile) is genuinely skipped —
+an outer vmap would turn that cond into a select and pay the controller
+every interval.  The controller itself is ``jax.vmap``-ed over lanes
+inside the fire branch, with per-lane config knobs rebuilt from the swept
+value vectors.
+
+Engine-side bookkeeping is shared with the numpy engine via
+``simulator/simjax.py``; with a common-random-number uniform field
+(``sample_u``) the two engines agree bitwise on sampling and interval
+arithmetic, so promotions/demotions/wasteful counts match exactly (see
+tests/test_scan_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import (SAMPLING_PERIOD_HISTORY,
+                                   SAMPLING_PERIOD_RECENCY, arms_step_impl,
+                                   policy_every, sampling_period)
+from repro.core.scheduler import observe_migration_cost
+from repro.core.state import MODE_RECENCY, ARMSConfig, MigrationPlan, \
+    init_state
+from repro.simulator import machine as machine_mod
+from repro.simulator import simjax
+from repro.simulator.engine import SimResult, oracle_topk_masks
+from repro.simulator.sampling import (_NORMAL_SWITCH,
+                                      pebs_sample_from_uniform)
+
+# ARMSConfig float knobs that may be batched (traced) in a config sweep.
+# Shape-determining ints (bs_max) and the kernel flag must stay static.
+SWEEPABLE = frozenset({
+    "alpha_s", "alpha_l", "w_s_history", "w_l_history", "w_s_recency",
+    "w_l_recency", "pht_delta", "pht_lambda", "stabilize_eps", "noise_z",
+    "latency_fast_us", "latency_slow_us", "access_scale",
+    "migrate_cost_alpha", "init_promo_cost_us", "init_demo_cost_us",
+})
+
+
+def _empty_plan(B: int, bs_max: int) -> MigrationPlan:
+    i32 = jnp.int32
+    return MigrationPlan(
+        promote=jnp.full((B, bs_max), -1, i32),
+        demote=jnp.full((B, bs_max), -1, i32),
+        valid=jnp.zeros((B, bs_max), bool),
+        count=jnp.zeros((B,), i32),
+        batch_size=jnp.zeros((B,), i32))
+
+
+def _init_carry(B: int, n: int, keys):
+    f32 = jnp.float32
+    return dict(
+        in_fast=jnp.zeros((B, n), bool),
+        buf=jnp.zeros((B, n), f32),
+        promoted_at=jnp.full((B, n), -(10 ** 9), jnp.int32),
+        demoted_at=jnp.full((B, n), -(10 ** 9), jnp.int32),
+        t=jnp.zeros((), jnp.int32),
+        key=keys,
+        slow_bw=jnp.ones((B,), f32),      # everything starts slow
+        app_bw=jnp.zeros((B,), f32),
+        exec_time=jnp.zeros((B,), f32),
+        promotions=jnp.zeros((B,), jnp.int32),
+        demotions=jnp.zeros((B,), jnp.int32),
+        wasteful=jnp.zeros((B,), jnp.int32),
+        acc_fast_total=jnp.zeros((B,), f32),
+        acc_total=jnp.zeros((B,), f32),
+        recall_sum=jnp.zeros((B,), f32),
+    )
+
+
+def _need_normal(trace) -> bool:
+    """Static: can any page's sampling rate reach the normal-approx regime?
+
+    When False the ndtri branch of the sampler is dead code and statically
+    dropped; selected values are identical either way, so this never
+    affects cross-engine equivalence.
+    """
+    return bool(np.max(trace) / SAMPLING_PERIOD_RECENCY >= _NORMAL_SWITCH)
+
+
+def _bwhere(pred, a, b):
+    """Per-lane select: pred [B], leaves [B] or [B, ...]."""
+    return jax.tree_util.tree_map(
+        lambda x, y: jnp.where(pred.reshape((-1,) + (1,) * (x.ndim - 1)),
+                               x, y), a, b)
+
+
+def _simulate(trace, oracle_mask, base_cfg: ARMSConfig, k: int,
+              cfg_names: tuple, cfg_vals, mp, promo_us, demo_us, keys,
+              sample, sampling: str, need_normal: bool):
+    """Traceable batched replay; returns a dict of [B] scalars + timelines.
+
+    Lanes (= sweep entries) form the leading axis of every carried array.
+    ``cfg_names``/``cfg_vals`` (static names, [B, F] values) rebuild a
+    per-lane ARMSConfig inside the vmapped controller; empty names = all
+    lanes share ``base_cfg``.  ``sampling`` (static) selects the PEBS noise
+    source:
+      * "prng": per-lane keys threaded through the carry; per-interval
+        uniforms transformed by the shared Poisson inverse-CDF;
+      * "crn":  ``sample`` is a [T, n] uniform field, transformed per
+        interval — the path the numpy engine mirrors bitwise;
+      * "pre":  ``sample`` is a precomputed (obs_history, obs_recency)
+        pair of [T, n] observation grids; lanes only select by mode.
+    """
+    T, n = trace.shape
+    B = keys.shape[0]
+    bs_max = min(base_cfg.bs_max, n)
+    f32 = jnp.float32
+
+    def lane_cfg(vec):
+        if not cfg_names:
+            return base_cfg
+        return dataclasses.replace(
+            base_cfg, **{nm: vec[i] for i, nm in enumerate(cfg_names)})
+
+    def controller(state, counts, slow_bw, app_bw, vec):
+        cfg = lane_cfg(vec)
+        state, plan = arms_step_impl(state, counts, slow_bw, app_bw,
+                                     cfg=cfg, k=k)
+        state = jax.lax.cond(
+            plan.count > 0,
+            lambda s: observe_migration_cost(s, promo_us, demo_us, cfg),
+            lambda s: s, state)
+        return state, plan
+
+    def observed_for(xs_sample, true, mode, subs):
+        period = sampling_period(mode).astype(f32)[:, None]     # [B, 1]
+        if sampling == "prng":
+            u = jax.vmap(lambda s: jax.random.uniform(s, (n,), dtype=f32)
+                         )(subs)
+            return pebs_sample_from_uniform(u, true[None], period,
+                                            need_normal=need_normal)
+        if sampling == "crn":
+            return pebs_sample_from_uniform(xs_sample[None], true[None],
+                                            period, need_normal=need_normal)
+        obs_h, obs_r = xs_sample
+        return jnp.where(mode[:, None] == MODE_RECENCY, obs_r[None],
+                         obs_h[None])
+
+    def step(c, xs):
+        true, orc, xs_sample = xs
+        state = c["state"]
+        mode = state.mode                                       # [B]
+        split = jax.vmap(jax.random.split, out_axes=1)(c["key"])
+        key, subs = split[0], split[1]
+        observed = observed_for(xs_sample, true, mode, subs)    # [B, n]
+        t = c["t"] + 1                       # 1-based policy tick (shared)
+        every = policy_every(mode)                              # [B]
+        buf = c["buf"] + observed
+        do = (t % every) == 0                                   # [B]
+
+        def fire(args):
+            state, buf = args
+            counts = buf / every.astype(f32)[:, None]
+            new_state, plan = jax.vmap(controller)(
+                state, counts, c["slow_bw"], c["app_bw"], cfg_vals)
+            # lanes whose policy is not due keep their state/buffer; their
+            # plan entries are invalidated so no migrations execute.
+            state = _bwhere(do, new_state, state)
+            buf = jnp.where(do[:, None], 0.0, buf)
+            plan = MigrationPlan(
+                promote=jnp.where(do[:, None], plan.promote, -1),
+                demote=jnp.where(do[:, None], plan.demote, -1),
+                valid=plan.valid & do[:, None],
+                count=jnp.where(do, plan.count, 0),
+                batch_size=jnp.where(do, plan.batch_size, 0))
+            return state, buf, plan
+
+        def skip(args):
+            state, buf = args
+            return state, buf, _empty_plan(B, bs_max)
+
+        # Scalar predicate: the controller (top-k ranking dominates its
+        # cost) only runs on intervals where at least one lane's policy
+        # cadence is due — unlike an outer vmap-of-cond, which would
+        # select-execute it every interval.
+        state, buf, plan = jax.lax.cond(jnp.any(do), fire, skip,
+                                        (state, buf))
+
+        in_fast, pexec, dexec = jax.vmap(
+            simjax.apply_migrations, in_axes=(0, 0, 0, 0, None))(
+            c["in_fast"], plan.promote, plan.demote, plan.valid, k)
+        n_promo = pexec.sum(axis=1).astype(jnp.int32)           # [B]
+        n_demo = dexec.sum(axis=1).astype(jnp.int32)
+        waste, promoted_at, demoted_at = jax.vmap(
+            simjax.wasteful_update, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+            t - 1, c["promoted_at"], c["demoted_at"], plan.promote,
+            plan.demote, pexec, dexec)
+        acc_fast, acc_slow, wall, slow_share, app_frac = jax.vmap(
+            simjax.interval_accounting, in_axes=(None, None, 0, 0, 0))(
+            mp, true, in_fast, n_promo.astype(f32), n_demo.astype(f32))
+        recall = (in_fast & orc[None]).sum(axis=1).astype(f32) / k
+
+        new_c = dict(
+            state=state, in_fast=in_fast, buf=buf,
+            promoted_at=promoted_at, demoted_at=demoted_at, t=t, key=key,
+            slow_bw=slow_share, app_bw=app_frac,
+            exec_time=c["exec_time"] + wall,
+            promotions=c["promotions"] + n_promo,
+            demotions=c["demotions"] + n_demo,
+            wasteful=c["wasteful"] + waste,
+            acc_fast_total=c["acc_fast_total"] + acc_fast,
+            acc_total=c["acc_total"] + acc_fast + acc_slow,
+            recall_sum=c["recall_sum"] + recall)
+        ys = dict(slow=slow_share,
+                  hits=acc_fast / jnp.maximum(acc_fast + acc_slow, 1e-9),
+                  mode=state.mode, promos=n_promo)
+        return new_c, ys
+
+    trace = jnp.asarray(trace, f32)
+    if sampling == "prng":
+        xs_sample = jnp.zeros((T, 1), f32)   # placeholder xs leaf
+    elif sampling == "crn":
+        xs_sample = jnp.asarray(sample, f32)
+    else:
+        xs_sample = sample                   # (obs_h, obs_r) [T, n] pair
+    carry = _init_carry(B, n, keys)
+    carry["state"] = jax.vmap(lambda v: init_state(n, lane_cfg(v)))(cfg_vals)
+    xs = (trace, jnp.asarray(oracle_mask, bool), xs_sample)
+    carry, ys = jax.lax.scan(step, carry, xs)
+    return dict(
+        exec_time=carry["exec_time"], promotions=carry["promotions"],
+        demotions=carry["demotions"], wasteful=carry["wasteful"],
+        hot_recall=carry["recall_sum"] / T,
+        fast_hit_frac=carry["acc_fast_total"]
+        / jnp.maximum(carry["acc_total"], 1e-9),
+        timeline_slow_bw=ys["slow"], timeline_fast_hits=ys["hits"],
+        timeline_mode=ys["mode"], timeline_promotions=ys["promos"])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("base_cfg", "k", "cfg_names", "sampling", "need_normal"))
+def _sim_jit(trace, oracle_mask, base_cfg, k, cfg_names, cfg_vals, mp,
+             promo_us, demo_us, keys, sample, sampling, need_normal):
+    return _simulate(trace, oracle_mask, base_cfg, k, cfg_names, cfg_vals,
+                     mp, promo_us, demo_us, keys, sample, sampling,
+                     need_normal)
+
+
+def _machine_args(machine):
+    return (simjax.machine_params(machine),
+            jnp.float32(machine_mod.promo_page_us(machine)),
+            jnp.float32(machine_mod.demo_page_us(machine)))
+
+
+def _to_result(out, lane: int, name: str) -> SimResult:
+    lane_out = jax.tree_util.tree_map(lambda x: x[lane], out)
+    ts = {k: np.asarray(v) for k, v in lane_out.items()
+          if k.startswith("timeline_")}
+    return SimResult(
+        name=name,
+        exec_time_s=float(lane_out["exec_time"]),
+        promotions=int(lane_out["promotions"]),
+        demotions=int(lane_out["demotions"]),
+        wasteful=int(lane_out["wasteful"]),
+        hot_recall=float(lane_out["hot_recall"]),
+        fast_hit_frac=float(lane_out["fast_hit_frac"]),
+        timeline_slow_bw=ts["timeline_slow_bw"].astype(np.float64),
+        timeline_fast_hits=ts["timeline_fast_hits"].astype(np.float64),
+        timeline_mode=ts["timeline_mode"].astype(np.int32),
+        timeline_promotions=ts["timeline_promotions"].astype(np.int32))
+
+
+def _timelines_lane_major(out):
+    """scan stacks timelines as [T, B]; give callers [B, T]."""
+    for key in list(out):
+        if key.startswith("timeline_"):
+            out[key] = jnp.swapaxes(out[key], 0, 1)
+    return out
+
+
+def arms_sim(trace, machine, k: int, cfg: ARMSConfig | None = None,
+             seed: int = 0, sample_u=None, name: str = "arms") -> SimResult:
+    """Device-resident ARMS replay of ``trace`` — scan-engine ``run()``.
+
+    ``sample_u``: optional [T, n] uniform field selecting the CRN sampling
+    path (pass the same field to ``engine.run(..., sample_u=...)`` for an
+    exactly-comparable reference run).  Default: PEBS noise drawn with
+    ``jax.random`` from a key threaded through the scan carry.
+    """
+    cfg = cfg or ARMSConfig()
+    trace = np.asarray(trace)
+    assert 0 < k <= trace.shape[1]
+    oracle = oracle_topk_masks(trace, k)
+    mp, promo_us, demo_us = _machine_args(machine)
+    crn = sample_u is not None
+    sample = (jnp.asarray(sample_u, jnp.float32) if crn
+              else jnp.zeros((trace.shape[0], 1), jnp.float32))
+    keys = jax.random.PRNGKey(seed)[None]
+    out = _sim_jit(jnp.asarray(trace, jnp.float32), jnp.asarray(oracle),
+                   cfg, k, (), jnp.zeros((1, 0), jnp.float32), mp, promo_us,
+                   demo_us, keys, sample, "crn" if crn else "prng",
+                   _need_normal(trace))
+    return _to_result(_timelines_lane_major(out), 0, name)
+
+
+def sweep_seeds(trace, machine, k: int, seeds, cfg: ARMSConfig | None = None
+                ) -> list[SimResult]:
+    """Batched ARMS runs over PRNG seeds: one compile, one device dispatch.
+
+    Every seed's full replay runs in lockstep in the lane axis — the
+    sampling-noise study (and any seed-averaged comparison) no longer pays
+    one sequential simulation per seed.
+    """
+    cfg = cfg or ARMSConfig()
+    seeds = list(seeds)
+    if not seeds:
+        raise ValueError("sweep_seeds needs at least one seed")
+    trace = np.asarray(trace)
+    oracle = oracle_topk_masks(trace, k)
+    mp, promo_us, demo_us = _machine_args(machine)
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    B = len(seeds)
+    out = _sim_jit(jnp.asarray(trace, jnp.float32), jnp.asarray(oracle),
+                   cfg, k, (), jnp.zeros((B, 0), jnp.float32), mp, promo_us,
+                   demo_us, keys, jnp.zeros((trace.shape[0], 1), jnp.float32),
+                   "prng", _need_normal(trace))
+    out = _timelines_lane_major(out)
+    return [_to_result(out, i, f"arms[seed={s}]")
+            for i, s in enumerate(seeds)]
+
+
+def _precompute_observations(trace, u, need_normal: bool):
+    """Both mode-dependent observation grids for a shared CRN field.
+
+    Row-by-row scan keeps the transform's intermediates small while
+    producing the full [T, n] grids every config lane shares.
+    """
+    def row(_, xs):
+        u_t, tr_t = xs
+        obs_h = pebs_sample_from_uniform(
+            u_t, tr_t, jnp.float32(SAMPLING_PERIOD_HISTORY),
+            need_normal=need_normal)
+        obs_r = pebs_sample_from_uniform(
+            u_t, tr_t, jnp.float32(SAMPLING_PERIOD_RECENCY),
+            need_normal=need_normal)
+        return None, (obs_h, obs_r)
+    return jax.lax.scan(row, None, (u, trace))[1]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("base_cfg", "k", "cfg_names", "need_normal"))
+def _sweep_cfg_jit(trace, oracle_mask, base_cfg, k, cfg_names, cfg_vals, mp,
+                   promo_us, demo_us, keys, u, need_normal):
+    obs = _precompute_observations(trace, u, need_normal)
+    return _simulate(trace, oracle_mask, base_cfg, k, cfg_names, cfg_vals,
+                     mp, promo_us, demo_us, keys, obs, "pre", need_normal)
+
+
+def sweep_arms_configs(trace, machine, k: int, overrides: dict,
+                       base_cfg: ARMSConfig | None = None, seed: int = 0
+                       ) -> list[SimResult]:
+    """Batched ARMS runs over a grid of float knob settings.
+
+    ``overrides`` maps ARMSConfig float field names to equal-length value
+    lists; row b of every list forms config b.  All configs share one CRN
+    uniform noise field (paired comparisons — config differences are never
+    confounded with sampling noise), which lets the per-mode observation
+    grids be computed once and broadcast across lanes: config lanes pay
+    zero sampling cost, and the whole sweep is one compiled
+    ``scan``+``vmap`` program.
+    """
+    base_cfg = base_cfg or ARMSConfig()
+    bad = set(overrides) - SWEEPABLE
+    if bad:
+        raise ValueError(
+            f"non-sweepable ARMSConfig fields {sorted(bad)}; sweepable: "
+            f"{sorted(SWEEPABLE)}")
+    names = tuple(sorted(overrides))
+    if not names:
+        raise ValueError("overrides must name at least one ARMSConfig knob")
+    B = len(overrides[names[0]])
+    if B == 0 or any(len(overrides[nm]) != B for nm in names):
+        raise ValueError(
+            "override value lists must be non-empty and of equal length; "
+            f"got {({nm: len(overrides[nm]) for nm in names})}")
+    vals = np.asarray([[float(overrides[nm][b]) for nm in names]
+                       for b in range(B)], np.float32)
+    trace = np.asarray(trace)
+    T, n = trace.shape
+    oracle = oracle_topk_masks(trace, k)
+    mp, promo_us, demo_us = _machine_args(machine)
+    u = jax.random.uniform(jax.random.PRNGKey(seed), (T, n),
+                           dtype=jnp.float32)
+    keys = jnp.stack([jax.random.PRNGKey(0)] * B)
+    out = _sweep_cfg_jit(jnp.asarray(trace, jnp.float32),
+                         jnp.asarray(oracle), base_cfg, k, names,
+                         jnp.asarray(vals), mp, promo_us, demo_us, keys, u,
+                         _need_normal(trace))
+    out = _timelines_lane_major(out)
+    labels = [",".join(f"{nm}={v:.4g}" for nm, v in zip(names, row))
+              for row in vals]
+    return [_to_result(out, i, f"arms[{lbl}]")
+            for i, lbl in enumerate(labels)]

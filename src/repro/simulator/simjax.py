@@ -1,0 +1,126 @@
+"""Jittable engine-side bookkeeping shared by both simulation engines.
+
+The numpy reference engine (simulator/engine.py) and the compiled
+``lax.scan`` engine (simulator/scan_engine.py) must stay *semantically
+aligned*: capacity/validity enforcement, wasteful-migration accounting and
+the interval cost model are defined once here, as pure jax functions, and
+used by both.  The numpy engine calls them per interval in CRN mode (where
+bitwise agreement with the scan engine matters); the scan engine inlines
+them into its scan body.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.simulator.engine import WASTE_WINDOW
+from repro.simulator.machine import CACHELINE, PAGE_BYTES, MachineSpec
+from repro.utils.pytree import pytree_dataclass
+
+
+@pytree_dataclass
+class MachineParams:
+    """f32 leaves of a MachineSpec, so the cost model is scan/vmap friendly."""
+
+    lat_fast_ns: jnp.ndarray
+    lat_slow_ns: jnp.ndarray
+    bw_fast: jnp.ndarray
+    bw_slow_read: jnp.ndarray
+    bw_slow_write: jnp.ndarray
+    mlp: jnp.ndarray
+
+
+def machine_params(m: MachineSpec) -> MachineParams:
+    f = lambda v: jnp.asarray(v, jnp.float32)
+    return MachineParams(
+        lat_fast_ns=f(m.lat_fast_ns), lat_slow_ns=f(m.lat_slow_ns),
+        bw_fast=f(m.bw_fast), bw_slow_read=f(m.bw_slow_read),
+        bw_slow_write=f(m.bw_slow_write), mlp=f(m.mlp))
+
+
+def interval_outcome(mp: MachineParams, acc_fast, acc_slow, promo_pages,
+                     demo_pages):
+    """jnp mirror of machine.interval_time + the engine's signal derivation.
+
+    Returns (wall_s, slow_share, app_bw_frac):
+      * ``slow_share`` is the slow-access share the engine feeds to the PHT
+        (engine.py rationale: utilization pegs at 1 under saturation);
+      * ``app_bw_frac`` is fast-tier bandwidth utilization for BS throttling.
+    """
+    app_fast_bytes = acc_fast * CACHELINE
+    app_slow_bytes = acc_slow * CACHELINE
+    mig_fast_bytes = (promo_pages + demo_pages) * PAGE_BYTES
+    mig_slow_read = promo_pages * PAGE_BYTES
+    mig_slow_write = demo_pages * PAGE_BYTES
+
+    t_lat = (acc_fast * mp.lat_fast_ns
+             + acc_slow * mp.lat_slow_ns) * 1e-9 / mp.mlp
+    t_bw_fast = (app_fast_bytes + mig_fast_bytes) / mp.bw_fast
+    t_bw_slow = ((app_slow_bytes + mig_slow_read) / mp.bw_slow_read
+                 + mig_slow_write / mp.bw_slow_write)
+    wall = jnp.maximum(jnp.maximum(t_lat, t_bw_fast),
+                       jnp.maximum(t_bw_slow, 1e-12))
+    slow_share = acc_slow / jnp.maximum(acc_fast + acc_slow, 1e-9)
+    app_frac = jnp.minimum(1.0, t_bw_fast / wall)
+    return wall, slow_share, app_frac
+
+
+def apply_migrations(in_fast, promote, demote, valid, k: int):
+    """Engine-side validation + capacity enforcement, fixed shape.
+
+    Semantics identical to the numpy engine's variable-length version:
+    demotions of pages actually in the fast tier are applied first; then
+    promotions of pages not (any longer) in the fast tier, in plan order,
+    capped by the free capacity after demotions.
+
+    Returns (in_fast, pexec, dexec): the new residency plus boolean masks
+    (aligned with the plan arrays) of the executed migrations.
+    """
+    n = in_fast.shape[0]
+    d_safe = jnp.where(valid & (demote >= 0), demote, 0)
+    dexec = valid & (demote >= 0) & in_fast[d_safe]
+    in_fast = in_fast.at[jnp.where(dexec, demote, n)].set(False, mode="drop")
+
+    p_safe = jnp.where(valid & (promote >= 0), promote, 0)
+    p_ok = valid & (promote >= 0) & (~in_fast[p_safe])
+    room = k - in_fast.sum().astype(jnp.int32)
+    rank = jnp.cumsum(p_ok.astype(jnp.int32)) - 1
+    pexec = p_ok & (rank < room)
+    in_fast = in_fast.at[jnp.where(pexec, promote, n)].set(True, mode="drop")
+    return in_fast, pexec, dexec
+
+
+def wasteful_update(t, promoted_at, demoted_at, promote, demote, pexec,
+                    dexec):
+    """WASTE_WINDOW accounting for one interval (t = 0-based engine index).
+
+    Returns (wasteful_this_interval, promoted_at, demoted_at).
+    """
+    n = promoted_at.shape[0]
+    p_safe = jnp.where(pexec, promote, 0)
+    d_safe = jnp.where(dexec, demote, 0)
+    waste = (pexec & (t - demoted_at[p_safe] <= WASTE_WINDOW)).sum() \
+        + (dexec & (t - promoted_at[d_safe] <= WASTE_WINDOW)).sum()
+    promoted_at = promoted_at.at[jnp.where(pexec, promote, n)].set(
+        t, mode="drop")
+    demoted_at = demoted_at.at[jnp.where(dexec, demote, n)].set(
+        t, mode="drop")
+    return waste.astype(jnp.int32), promoted_at, demoted_at
+
+
+@jax.jit
+def interval_accounting(mp: MachineParams, true_counts, in_fast, promo_pages,
+                        demo_pages):
+    """Full per-interval cost/accounting step, shared with the numpy engine.
+
+    Returns (acc_fast, acc_slow, wall_s, slow_share, app_bw_frac) as f32
+    scalars; in CRN mode the numpy engine calls this so its arithmetic is
+    bit-identical to the scan engine's.
+    """
+    true = jnp.asarray(true_counts, jnp.float32)
+    acc_fast = jnp.sum(true * in_fast)
+    acc_slow = jnp.sum(true) - acc_fast
+    wall, slow_share, app_frac = interval_outcome(
+        mp, acc_fast, acc_slow, jnp.asarray(promo_pages, jnp.float32),
+        jnp.asarray(demo_pages, jnp.float32))
+    return acc_fast, acc_slow, wall, slow_share, app_frac

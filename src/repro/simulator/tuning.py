@@ -1,9 +1,17 @@
-"""Tuning study over HeMem's knobs (paper §3).
+"""Tuning studies: HeMem's knobs (paper §3) + ARMS internal-knob sweeps.
 
 The paper uses SMAC/Bayesian optimization; the search space here is small
 enough (4 knobs) that seeded random search with a modest budget finds the
 same best-region configurations.  ``tune_hemem`` returns the best-performing
-config per workload — the paper's "Tuned-HeMem" comparator.
+config per workload — the paper's "Tuned-HeMem" comparator.  HeMem is a
+numpy policy, so its sweep replays simulations sequentially through the
+reference engine.
+
+``tune_arms`` is the JAX-native equivalent (the "From Good to Great"-style
+parameter study over ARMS's internal knobs, paper §6 sensitivity): the whole
+budget runs as ONE compiled ``lax.scan`` simulation batched over configs
+(``scan_engine.sweep_arms_configs``) with a shared common-random-number
+noise field, instead of ``budget`` sequential replays.
 """
 from __future__ import annotations
 
@@ -21,19 +29,41 @@ SPACE = dict(
     sample_period=[2_500, 5_000, 10_000, 20_000],
 )
 
+# ARMS internal knobs (paper §6 reports workloads are INSENSITIVE to these;
+# the sweep reproduces that claim rather than hunting per-workload optima).
+ARMS_SPACE = dict(
+    alpha_s=[0.5, 0.6, 0.7, 0.8, 0.9],
+    alpha_l=[0.05, 0.1, 0.2],
+    noise_z=[0.0, 0.25, 0.5],
+    pht_lambda=[0.05, 0.1, 0.2],
+)
+ARMS_DEFAULTS = dict(alpha_s=0.7, alpha_l=0.1, noise_z=0.25, pht_lambda=0.10)
 
-def sample_configs(budget: int, seed: int = 0):
-    """Seeded random draw from the knob grid (default config always tried)."""
+
+def _sample_grid(space: dict, defaults: dict, budget: int, seed: int):
+    """Seeded random draw from a knob grid (default config always tried)."""
     rng = np.random.default_rng(seed)
-    keys = list(SPACE)
-    grid = list(itertools.product(*(SPACE[k] for k in keys)))
+    keys = list(space)
+    grid = list(itertools.product(*(space[k] for k in keys)))
     picks = rng.choice(len(grid), size=min(budget, len(grid)), replace=False)
     configs = [dict(zip(keys, grid[i])) for i in picks]
-    default = dict(hot_threshold=8, cooling_threshold=18, migration_period=5,
-                   sample_period=10_000)
-    if default not in configs:
-        configs.insert(0, default)
+    if defaults not in configs:
+        configs.insert(0, dict(defaults))
     return configs
+
+
+def sample_configs(budget: int, seed: int = 0):
+    """HeMem knob draw (default config always tried)."""
+    return _sample_grid(
+        SPACE,
+        dict(hot_threshold=8, cooling_threshold=18, migration_period=5,
+             sample_period=10_000),
+        budget, seed)
+
+
+def sample_arms_configs(budget: int, seed: int = 0):
+    """ARMS internal-knob draw (published defaults always tried)."""
+    return _sample_grid(ARMS_SPACE, ARMS_DEFAULTS, budget, seed)
 
 
 def tune_hemem(trace, machine, k, budget: int = 24, seed: int = 0):
@@ -43,5 +73,24 @@ def tune_hemem(trace, machine, k, budget: int = 24, seed: int = 0):
         res = run(HeMemPolicy(**cfg), trace, machine, k, seed=seed)
         rows.append((cfg, res))
     rows.sort(key=lambda cr: cr[1].exec_time_s)
+    best_cfg, best_res = rows[0]
+    return best_cfg, best_res, rows
+
+
+def tune_arms(trace, machine, k, budget: int = 24, seed: int = 0,
+              base_cfg=None):
+    """Batched ARMS internal-knob sweep: one compiled scan over all configs.
+
+    -> (best_config, best_result, all_rows sorted by exec time).  All
+    configs see identical sampling noise (shared CRN field), so row
+    ordering reflects the knobs alone.
+    """
+    from repro.simulator.scan_engine import sweep_arms_configs
+
+    cfgs = sample_arms_configs(budget, seed)
+    overrides = {key: [c[key] for c in cfgs] for key in ARMS_SPACE}
+    results = sweep_arms_configs(trace, machine, k, overrides,
+                                 base_cfg=base_cfg, seed=seed)
+    rows = sorted(zip(cfgs, results), key=lambda cr: cr[1].exec_time_s)
     best_cfg, best_res = rows[0]
     return best_cfg, best_res, rows

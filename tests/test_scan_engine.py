@@ -1,0 +1,154 @@
+"""Scan-engine vs numpy-engine equivalence + batched-sweep behaviour.
+
+The compiled ``lax.scan`` engine must be a faithful replacement for the
+numpy reference engine on the ARMS policy: under a shared
+common-random-number sampling field both engines see bitwise-identical
+PEBS noise and interval arithmetic, so migration counts must match
+EXACTLY and execution time to float32 accumulation error.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines.arms_policy import ARMSPolicy
+from repro.core.state import ARMSConfig
+from repro.simulator import scan_engine, tuning, workloads
+from repro.simulator.engine import oracle_topk_masks, run
+from repro.simulator.machine import NUMA, PMEM_LARGE
+from repro.simulator.sampling import pebs_sample_from_uniform, uniform_field
+
+T, N, K = 160, 512, 64
+
+
+def _crn_pair(wl, machine=PMEM_LARGE, seed=0, cfg=None):
+    trace = workloads.make(wl, T=T, n=N)
+    u = uniform_field(T, N, seed=123)
+    ref = run(ARMSPolicy(cfg), trace, machine, K, seed=seed, sample_u=u)
+    out = scan_engine.arms_sim(trace, machine, K, cfg=cfg, sample_u=u)
+    return ref, out
+
+
+class TestEngineEquivalence:
+    @pytest.mark.parametrize("wl", ["gups", "silo-tpcc"])
+    def test_matches_numpy_reference(self, wl):
+        ref, out = _crn_pair(wl)
+        assert out.promotions == ref.promotions
+        assert out.demotions == ref.demotions
+        assert out.wasteful == ref.wasteful
+        np.testing.assert_allclose(out.exec_time_s, ref.exec_time_s,
+                                   rtol=1e-4)
+        np.testing.assert_array_equal(out.timeline_promotions,
+                                      ref.timeline_promotions)
+        np.testing.assert_array_equal(out.timeline_mode, ref.timeline_mode)
+
+    def test_matches_on_other_machine(self):
+        ref, out = _crn_pair("gups", machine=NUMA)
+        assert (out.promotions, out.demotions, out.wasteful) == \
+            (ref.promotions, ref.demotions, ref.wasteful)
+        np.testing.assert_allclose(out.exec_time_s, ref.exec_time_s,
+                                   rtol=1e-4)
+
+    def test_recall_and_hits_close(self):
+        ref, out = _crn_pair("gups")
+        np.testing.assert_allclose(out.hot_recall, ref.hot_recall, rtol=1e-4)
+        np.testing.assert_allclose(out.fast_hit_frac, ref.fast_hit_frac,
+                                   rtol=1e-4)
+
+    def test_kernel_and_jnp_score_paths_agree(self):
+        """The fused Pallas path and the jnp escape hatch are one formula."""
+        u = uniform_field(T, N, seed=9)
+        trace = workloads.make("gups", T=T, n=N)
+        a = scan_engine.arms_sim(trace, PMEM_LARGE, K, sample_u=u)
+        b = scan_engine.arms_sim(trace, PMEM_LARGE, K,
+                                 cfg=ARMSConfig(use_score_kernel=False),
+                                 sample_u=u)
+        assert a.promotions == b.promotions
+        assert a.wasteful == b.wasteful
+        np.testing.assert_allclose(a.exec_time_s, b.exec_time_s, rtol=1e-5)
+
+
+class TestSweeps:
+    def test_seed_sweep_deterministic(self):
+        trace = workloads.make("btree", T=T, n=N)
+        r1 = scan_engine.sweep_seeds(trace, PMEM_LARGE, K, [0, 1, 2])
+        r2 = scan_engine.sweep_seeds(trace, PMEM_LARGE, K, [0, 1, 2])
+        for a, b in zip(r1, r2):
+            assert a.exec_time_s == b.exec_time_s
+            assert a.promotions == b.promotions
+            np.testing.assert_array_equal(a.timeline_promotions,
+                                          b.timeline_promotions)
+
+    def test_seed_sweep_lane_matches_single_run(self):
+        """A sweep lane is bitwise the same replay as a standalone run."""
+        trace = workloads.make("gups", T=T, n=N)
+        single = scan_engine.arms_sim(trace, PMEM_LARGE, K, seed=3)
+        lane = scan_engine.sweep_seeds(trace, PMEM_LARGE, K, [0, 3, 7])[1]
+        assert lane.promotions == single.promotions
+        assert lane.exec_time_s == single.exec_time_s
+
+    def test_seed_sweep_varies_noise(self):
+        trace = workloads.make("silo-tpcc", T=T, n=N)
+        rows = scan_engine.sweep_seeds(trace, PMEM_LARGE, K, range(4))
+        assert len({r.exec_time_s for r in rows}) > 1  # noise does vary
+
+    def test_config_sweep_lane_matches_crn_single_run(self):
+        """Config lane 0 (defaults) == arms_sim on the sweep's CRN field."""
+        seed = 0
+        trace = workloads.make("gups", T=T, n=N)
+        u = np.asarray(jax.random.uniform(jax.random.PRNGKey(seed), (T, N),
+                                          dtype=jnp.float32))
+        rows = scan_engine.sweep_arms_configs(
+            trace, PMEM_LARGE, K, dict(alpha_s=[0.7, 0.5]), seed=seed)
+        ref = scan_engine.arms_sim(trace, PMEM_LARGE, K, sample_u=u)
+        assert rows[0].promotions == ref.promotions
+        assert rows[0].exec_time_s == ref.exec_time_s
+
+    def test_config_sweep_differentiates_configs(self):
+        trace = workloads.make("gups", T=T, n=N)
+        rows = scan_engine.sweep_arms_configs(
+            trace, PMEM_LARGE, K, dict(access_scale=[10_000.0, 0.0]))
+        assert rows[0].promotions > 0
+        assert rows[1].promotions == 0      # zero benefit -> gate rejects
+        assert rows[1].exec_time_s > rows[0].exec_time_s
+
+    def test_config_sweep_rejects_non_sweepable(self):
+        trace = workloads.make("gups", T=40, n=64)
+        with pytest.raises(ValueError):
+            scan_engine.sweep_arms_configs(trace, PMEM_LARGE, 8,
+                                           dict(bs_max=[32, 64]))
+
+    def test_tune_arms_runs_batched(self):
+        trace = workloads.make("gups", T=80, n=256)
+        best_cfg, best_res, rows = tuning.tune_arms(trace, PMEM_LARGE, 32,
+                                                    budget=6)
+        assert len(rows) >= 6
+        assert best_res.exec_time_s == min(r.exec_time_s for _, r in rows)
+        assert set(best_cfg) == set(tuning.ARMS_SPACE)
+
+
+class TestSamplingTransform:
+    def test_poisson_from_uniform_moments(self):
+        """Inverse-CDF transform reproduces Poisson mean/variance."""
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.random(200_000), jnp.float32)
+        for lam in (0.05, 0.8, 5.0, 40.0):
+            x = np.asarray(pebs_sample_from_uniform(
+                u, jnp.full(u.shape, lam * 1e4, jnp.float32), 1e4))
+            assert abs(x.mean() - lam) < 0.05 * max(lam, 1.0)
+            assert abs(x.var() - lam) < 0.1 * max(lam, 1.0)
+
+    def test_zero_rate_yields_zero(self):
+        u = jnp.asarray([0.01, 0.5, 0.999], jnp.float32)
+        x = pebs_sample_from_uniform(u, jnp.zeros(3), 1e4)
+        np.testing.assert_array_equal(np.asarray(x), 0.0)
+
+
+class TestOracleMasks:
+    def test_matches_per_interval_argpartition(self):
+        trace = workloads.make("btree", T=40, n=128)
+        masks = oracle_topk_masks(trace, 16)
+        for t in range(0, 40, 7):
+            topk = np.argpartition(trace[t], -16)[-16:]
+            assert masks[t].sum() == 16
+            assert masks[t][topk].all()
