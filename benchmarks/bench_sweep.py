@@ -1,18 +1,22 @@
 """Record the tuning/sweep before-vs-after timings into BENCH_tuning.json.
 
-Three tiers of "before":
-  * ``seed``:    the pre-PR ARMS simulator path — per-interval device syncs
-    in ``ARMSPolicy.step`` (``int(policy_every(state.mode))`` +
+Three tiers of "before" for the ARMS sweep:
+  * ``seed``:    the pre-PR-1 ARMS simulator path — per-interval device
+    syncs in ``ARMSPolicy.step`` (``int(policy_every(state.mode))`` +
     ``float(sampling_period(...))`` every simulator interval) and the
     per-interval oracle ``argpartition`` in the engine loop.  Replicated
     here as ``SeedSyncARMSPolicy``/``_seed_engine_run`` so the number stays
     reproducible after the optimized code replaced it.
-  * ``sequential``: the post-PR numpy loop (host-cached cadence, hoisted
+  * ``sequential``: the post-PR-1 numpy loop (host-cached cadence, hoisted
     oracle) replaying the sweep one simulation at a time.
   * ``batched``: the compiled lax.scan + vmap sweep (scan_engine).
 
-Also times ``tune_hemem`` (the paper's tuning study; HeMem is a numpy
-policy, so it benefits only from the engine-side oracle hoist).
+For the tuned-baseline study (``tune_hemem`` — the paper's "Tuned-X"
+comparators), the "before" is the pre-functional-protocol path: HeMem as an
+imperative numpy object (``SeqNumpyHeMemPolicy`` replica below) replaying
+the whole budget sequentially through the reference engine.  The "after"
+runs the same budget as ONE lane-batched compiled scan
+(``tuning.tune_hemem`` -> ``scan_engine.sweep_policy_configs``).
 
 Usage: PYTHONPATH=src:. python benchmarks/bench_sweep.py [--out BENCH_tuning.json]
 """
@@ -25,12 +29,66 @@ import time
 import numpy as np
 
 from repro.baselines.arms_policy import ARMSPolicy
+from repro.baselines.base import Policy
 from repro.core import policy_every, sampling_period
 from repro.core.state import ARMSConfig
 from repro.simulator import scan_engine, tuning, workloads
 from repro.simulator.engine import run
 from repro.simulator.machine import PMEM_LARGE, interval_time
 from repro.simulator.sampling import pebs_sample
+
+
+class SeqNumpyHeMemPolicy(Policy):
+    """Pre-PR HeMem: the imperative numpy implementation, verbatim.
+
+    Replicated so the sequential-tuning baseline stays reproducible after
+    the functional-protocol rewrite replaced it (the live ``HeMemPolicy``
+    now runs the jittable spec even under the numpy engine).
+    """
+
+    name = "hemem"
+    migration_limit = 12
+
+    def __init__(self, hot_threshold=8.0, cooling_threshold=18.0,
+                 migration_period=5, sample_period=10_000.0):
+        self.hot_threshold = float(hot_threshold)
+        self.cooling_threshold = float(cooling_threshold)
+        self.migration_period = int(migration_period)
+        self._sample_period = float(sample_period)
+
+    def reset(self, n_pages, k, machine):
+        self.n, self.k = n_pages, k
+        self.counts = np.zeros(n_pages)
+        self.in_fast = np.zeros(n_pages, bool)
+        self.first_hot = np.full(n_pages, np.inf)
+        self.t = 0
+
+    def sampling_period(self):
+        return self._sample_period
+
+    def step(self, observed, slow_bw_frac, app_bw_frac):
+        self.t += 1
+        self.counts += observed
+        if self.counts.max() >= self.cooling_threshold:
+            self.counts *= 0.5
+        hot = self.counts >= self.hot_threshold
+        newly_hot = hot & np.isinf(self.first_hot)
+        self.first_hot[newly_hot] = self.t
+        self.first_hot[~hot] = np.inf
+        if self.t % self.migration_period:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        want = np.flatnonzero(hot & ~self.in_fast)
+        want = want[np.argsort(self.first_hot[want], kind="stable")]
+        want = want[: self.migration_limit]
+        free = self.k - int(self.in_fast.sum())
+        need_victims = max(0, len(want) - free)
+        cold_in_fast = np.flatnonzero(self.in_fast & ~hot)
+        victims = cold_in_fast[np.argsort(self.counts[cold_in_fast],
+                                          kind="stable")][:need_victims]
+        want = want[: free + len(victims)]
+        self.in_fast[victims] = False
+        self.in_fast[want] = True
+        return want, victims
 
 
 class SeedSyncARMSPolicy(ARMSPolicy):
@@ -130,29 +188,65 @@ def main():
     rec["config_sweep_speedup_vs_seed_jnp"] = round(
         seed_style_s / rec["config_sweep_batched_warm_jnp_s"], 2)
 
-    # tune_hemem (the paper's tuning study) before/after: only the oracle
-    # hoist changed on this path; timed at the benchmark-suite scale.
+    # --- tuned-baseline sweeps (the paper's tuning study) ---
+    # Before: the pre-PR sequential loop — imperative numpy HeMem, one
+    # full reference-engine replay per config.  After: the same budget as
+    # ONE lane-batched compiled scan (functional-protocol sweep).
     hm_trace = workloads.make("gups", T=300, n=2048)
-    tuning.tune_hemem(hm_trace[:32], PMEM_LARGE, 256, budget=2)  # warm
+    hm_k = 256
+    hm_cfgs = tuning.sample_configs(budget, seed=0)
+    run(SeqNumpyHeMemPolicy(), hm_trace[:32], PMEM_LARGE, hm_k)  # warm
     t0 = time.time()
-    tuning.tune_hemem(hm_trace, PMEM_LARGE, 256, budget=budget)
-    rec["tune_hemem_after_s"] = round(time.time() - t0, 3)
+    for cfg in hm_cfgs:
+        run(SeqNumpyHeMemPolicy(**cfg), hm_trace, PMEM_LARGE, hm_k, seed=0)
+    rec["tune_hemem_sequential_pre_pr_s"] = round(time.time() - t0, 3)
+    print(f"[bench_sweep] tune_hemem pre-PR sequential numpy "
+          f"({len(hm_cfgs)} configs): "
+          f"{rec['tune_hemem_sequential_pre_pr_s']}s", flush=True)
+
+    t0 = time.time()
+    tuning.tune_hemem(hm_trace, PMEM_LARGE, hm_k, budget=budget)
+    rec["tune_hemem_batched_cold_s"] = round(time.time() - t0, 3)
+    t0 = time.time()
+    tuning.tune_hemem(hm_trace, PMEM_LARGE, hm_k, budget=budget)
+    rec["tune_hemem_batched_warm_s"] = round(time.time() - t0, 3)
+    rec["tune_hemem_lanes"] = scan_engine.last_dispatch["lanes"]
+    rec["tune_hemem_speedup_vs_pre_pr"] = round(
+        rec["tune_hemem_sequential_pre_pr_s"]
+        / rec["tune_hemem_batched_warm_s"], 2)
+    print(f"[bench_sweep] tune_hemem batched: "
+          f"cold {rec['tune_hemem_batched_cold_s']}s, "
+          f"warm {rec['tune_hemem_batched_warm_s']}s "
+          f"({rec['tune_hemem_speedup_vs_pre_pr']}x vs pre-PR)", flush=True)
+
+    for fam, tune_fn in (("memtis", tuning.tune_memtis),
+                         ("tpp", tuning.tune_tpp)):
+        tune_fn(hm_trace, PMEM_LARGE, hm_k, budget=budget)   # compile
+        t0 = time.time()
+        tune_fn(hm_trace, PMEM_LARGE, hm_k, budget=budget)
+        rec[f"tune_{fam}_batched_warm_s"] = round(time.time() - t0, 3)
 
     out = dict(
         description="Tuning/sweep bench before vs after the compiled "
-                    "lax.scan+vmap simulation engine (PR 1)",
+                    "lax.scan+vmap simulation engine (PR 1) and the "
+                    "lane-batched functional-policy sweeps (PR 2)",
         machine="pmem-large model; CI container CPU (2 cores)",
         notes=[
-            "'seed_style' replays the pre-PR code path: per-interval "
+            "'seed_style' replays the pre-PR-1 code path: per-interval "
             "device syncs in ARMSPolicy.step and per-interval oracle "
             "argpartition in the engine loop.",
-            "'sequential' is the post-PR numpy reference loop (those "
-            "satellite fixes applied), one simulation per config.",
+            "'sequential' is the numpy reference loop, one simulation "
+            "per config.",
             "'batched' runs the whole sweep as one compiled lax.scan "
             "batched over configs; 'warm' excludes the one-off compile.",
             "'jnp' uses ARMSConfig(use_score_kernel=False): the fused "
             "Pallas score kernel runs in interpret mode off-TPU, which "
             "costs extra inside batched sweeps.",
+            "'tune_hemem_sequential_pre_pr' replays the pre-functional-"
+            "protocol tuning study: imperative numpy HeMem through the "
+            "reference engine, one config at a time (gups, T=300, "
+            "n=2048, k=256); 'tune_hemem_batched' is the same budget as "
+            "one lane-batched compiled dispatch.",
         ],
         **rec,
     )

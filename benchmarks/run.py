@@ -20,7 +20,11 @@ def main() -> None:
     common.header()
     if not args.quick:
         pt.bench_tuning_study()
+        pt.bench_tuned_baselines()
         pt.bench_arms_sweep()
+    # always-on gate: tuning sweeps must stay lane-batched in the compiled
+    # scan engine (a silent fallback to a sequential loop fails CI here).
+    pt.bench_baseline_sweep_gate()
     pt.bench_main_comparison()
     pt.bench_migrations()
     pt.bench_adaptivity()

@@ -1,28 +1,147 @@
-"""ARMS wrapped as a simulator policy (the paper's system, §4-5).
+"""ARMS as a simulator policy (the paper's system, §4-5), in both forms:
 
-Bridges the pure-JAX controller into the numpy simulation loop: accumulates
-sampled counts between policy invocations (500 ms / 100 ms cadence expressed
-in 100 ms simulator intervals), feeds slow-tier bandwidth to the PHT, and
-executes the bandwidth-aware batched migration plan.
-
-The policy cadence and sampling period are tracked on the HOST, refreshed
-from the returned state once per policy invocation: ``mode`` only changes
-inside ``arms_step``, so polling ``policy_every(state.mode)`` every simulator
-interval (as earlier versions did) forced a device->host sync per interval
-for a value that could not have changed.
+* ``ARMSSpec`` — the functional-protocol spec (baselines/protocol.py): pure
+  init/observe/fires/policy over pytree state, with the ARMSConfig float
+  knobs under sweep (``cfg_names``/``cfg_vals``) living as traceable leaves
+  so a whole tuning grid runs lane-batched in the compiled scan engine.
+* ``ARMSPolicy`` — the hand-tuned stateful wrapper for the numpy reference
+  engine.  It predates ``LegacyPolicyAdapter`` and stays separate because
+  ARMS's sampling period / cadence are mode-dependent: the generic adapter
+  would poll them from device state every interval, while this wrapper
+  caches them on the HOST and refreshes once per policy invocation (mode
+  only changes inside ``arms_step``).
 """
 from __future__ import annotations
 
+import dataclasses
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.baselines.base import Policy
+from repro.baselines.protocol import PolicySpec
 from repro.core import ARMSConfig, arms_step, init_state
-from repro.core.controller import (POLICY_EVERY_HISTORY, POLICY_EVERY_RECENCY,
+from repro.core.controller import (MODE_SAMPLING_PERIODS,
+                                   POLICY_EVERY_HISTORY, POLICY_EVERY_RECENCY,
                                    SAMPLING_PERIOD_HISTORY,
-                                   SAMPLING_PERIOD_RECENCY)
+                                   SAMPLING_PERIOD_RECENCY, arms_step_impl,
+                                   policy_every, sampling_period)
 from repro.core.scheduler import observe_migration_cost
-from repro.core.state import MODE_HISTORY, MODE_RECENCY
+from repro.core.state import MODE_HISTORY, MODE_RECENCY, TieringState
 from repro.simulator import machine as machine_mod
+from repro.utils.pytree import pytree_dataclass
+
+# ARMSConfig float knobs that may be batched (traced) in a config sweep.
+# Shape-determining ints (bs_max) and the kernel flag must stay static.
+SWEEPABLE = frozenset({
+    "alpha_s", "alpha_l", "w_s_history", "w_l_history", "w_s_recency",
+    "w_l_recency", "pht_delta", "pht_lambda", "stabilize_eps", "noise_z",
+    "latency_fast_us", "latency_slow_us", "access_scale",
+    "migrate_cost_alpha", "init_promo_cost_us", "init_demo_cost_us",
+})
+
+
+@pytree_dataclass
+class ARMSRunState:
+    inner: TieringState
+    buf: jnp.ndarray       # f32 [n] counts accumulated since last policy run
+    t: jnp.ndarray         # i32 simulator-interval counter
+    promo_us: jnp.ndarray  # f32 measured per-page migration latencies for
+    demo_us: jnp.ndarray   # the §4.3 self-calibration feedback
+
+
+@pytree_dataclass(meta=("cfg_names", "base_cfg"))
+class ARMSSpec(PolicySpec):
+    """Functional-protocol ARMS.  ``cfg_vals[i]`` overrides ARMSConfig field
+    ``cfg_names[i]`` — the overridden floats are pytree leaves, so sweep
+    lanes batch over them while ``base_cfg`` (and every shape-determining
+    int) stays static."""
+
+    cfg_vals: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.zeros((0,), jnp.float32))
+    cfg_names: tuple = ()
+    base_cfg: ARMSConfig = ARMSConfig()
+
+    name = "arms"
+    dynamic_sampling_period = True
+    has_mode = True
+    #: mode-indexed sampling periods for precomputed CRN observation grids
+    PRE_PERIODS = MODE_SAMPLING_PERIODS
+
+    @classmethod
+    def make(cls, overrides: dict | None = None,
+             base_cfg: ARMSConfig | None = None) -> "ARMSSpec":
+        overrides = overrides or {}
+        bad = set(overrides) - SWEEPABLE
+        if bad:
+            raise ValueError(
+                f"non-sweepable ARMSConfig fields {sorted(bad)}; sweepable: "
+                f"{sorted(SWEEPABLE)}")
+        names = tuple(sorted(overrides))
+        vals = jnp.asarray([float(overrides[nm]) for nm in names],
+                           jnp.float32)
+        return cls(cfg_vals=vals, cfg_names=names,
+                   base_cfg=base_cfg or ARMSConfig())
+
+    def cfg(self) -> ARMSConfig:
+        if not self.cfg_names:
+            return self.base_cfg
+        return dataclasses.replace(
+            self.base_cfg,
+            **{nm: self.cfg_vals[i] for i, nm in enumerate(self.cfg_names)})
+
+    def pad_promote(self, n, k):
+        return max(1, min(n, self.base_cfg.bs_max))
+
+    pad_demote = pad_promote
+
+    def init(self, n_pages, k, machine):
+        return ARMSRunState(
+            inner=init_state(n_pages, self.cfg()),
+            buf=jnp.zeros((n_pages,), jnp.float32),
+            t=jnp.zeros((), jnp.int32),
+            promo_us=jnp.float32(machine_mod.promo_page_us(machine)),
+            demo_us=jnp.float32(machine_mod.demo_page_us(machine)))
+
+    def observe(self, state, observed):
+        return state.replace(buf=state.buf + observed, t=state.t + 1)
+
+    def fires(self, state):
+        return (state.t % policy_every(state.inner.mode)) == 0
+
+    def sampling_period(self, state):
+        return sampling_period(state.inner.mode).astype(jnp.float32)
+
+    def min_sampling_period(self):
+        return float(SAMPLING_PERIOD_RECENCY)
+
+    def mode_of(self, state):
+        return state.inner.mode
+
+    def obs_index(self, state):
+        """Index into the PRE_PERIODS observation grids ("pre" sampling)."""
+        return (state.inner.mode == MODE_RECENCY).astype(jnp.int32)
+
+    def policy(self, state, slow_bw, app_bw, k):
+        cfg = self.cfg()
+        # normalize accumulated counts to per-interval rate so the EWMA
+        # scale is mode-independent (500ms vs 100ms policy cadence, §5).
+        every = policy_every(state.inner.mode).astype(jnp.float32)
+        counts = state.buf / every
+        inner, plan = arms_step_impl(state.inner, counts, slow_bw, app_bw,
+                                     cfg=cfg, k=k)
+        # §4.3: self-calibrating migration-cost feedback
+        inner = jax.lax.cond(
+            plan.count > 0,
+            lambda s: observe_migration_cost(s, state.promo_us,
+                                             state.demo_us, cfg),
+            lambda s: s, inner)
+        promote = jnp.where(plan.valid, plan.promote, -1).astype(jnp.int32)
+        demote = jnp.where(plan.valid & (plan.demote >= 0), plan.demote,
+                           -1).astype(jnp.int32)
+        state = state.replace(inner=inner, buf=jnp.zeros_like(state.buf))
+        return state, promote, demote
 
 
 class ARMSPolicy(Policy):

@@ -1,8 +1,14 @@
-"""Policy protocol shared by ARMS and all baseline tiering engines.
+"""Stateful policy interface of the numpy reference engine.
 
 A policy sees only PEBS-sampled counts and bandwidth signals (never true
 access counts) and returns per-interval promotion/demotion page lists.  The
 simulator engine applies them, charges migration traffic, and scores the run.
+
+This imperative interface is now the *legacy* face of the functional policy
+protocol (baselines/protocol.py): every concrete policy is a pure
+``PolicySpec`` (jittable init/step over pytree state) and reaches the numpy
+engine through ``protocol.LegacyPolicyAdapter``, so both engines replay
+bitwise-identical decisions.  Only the engine-facing contract lives here.
 """
 from __future__ import annotations
 

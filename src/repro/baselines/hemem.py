@@ -9,73 +9,119 @@ Faithful simplifications of the behaviors the paper analyzes (§2-3):
     hot pages suffer head-of-line blocking (paper §3.2 "Serial migration");
   * cold pages are demoted only to make room (no free-page pool).
 
-The tunable knobs exposed here are the ones the paper's tuning study sweeps.
+The tunable knobs exposed here are the ones the paper's tuning study sweeps;
+they are leaves of ``HeMemSpec``, so a whole tuning budget runs lane-batched
+in the compiled scan engine (see simulator/tuning.py).
 """
 from __future__ import annotations
 
-import numpy as np
+import jax.numpy as jnp
 
-from repro.baselines.base import Policy
+from repro.baselines.protocol import (LegacyPolicyAdapter, PolicySpec,
+                                      capacity_victims, ranked_take,
+                                      scatter_set, truncate_ranked)
+from repro.utils.pytree import pytree_dataclass
 
 # Default knob values from the HeMem implementation (paper §2/§3.1).
 DEFAULTS = dict(hot_threshold=8.0, cooling_threshold=18.0,
                 migration_period=5, sample_period=10_000.0)
 
 
-class HeMemPolicy(Policy):
+@pytree_dataclass
+class HeMemState:
+    counts: jnp.ndarray        # f32 [n] cooled sample counts
+    in_fast: jnp.ndarray      # bool [n] policy's residency belief
+    first_hot: jnp.ndarray    # f32 [n] FIFO discovery order (inf = not hot)
+    t: jnp.ndarray            # i32 interval counter
+    cooling_events: jnp.ndarray  # i32
+
+
+@pytree_dataclass(meta=("migration_limit",))
+class HeMemSpec(PolicySpec):
+    hot_threshold: jnp.ndarray
+    cooling_threshold: jnp.ndarray
+    migration_period: jnp.ndarray     # i32
+    sample_period: jnp.ndarray
+    migration_limit: int = 12  # serial: ~120 pages/s at 100ms intervals
+
     name = "hemem"
-    migration_limit = 12   # serial migration: ~120 pages/s at 100ms intervals
+
+    @classmethod
+    def make(cls, hot_threshold=None, cooling_threshold=None,
+             migration_period=None, sample_period=None,
+             migration_limit: int = 12) -> "HeMemSpec":
+        pick = lambda v, key: DEFAULTS[key] if v is None else v
+        return cls(
+            hot_threshold=jnp.float32(pick(hot_threshold, "hot_threshold")),
+            cooling_threshold=jnp.float32(
+                pick(cooling_threshold, "cooling_threshold")),
+            migration_period=jnp.int32(
+                pick(migration_period, "migration_period")),
+            sample_period=jnp.float32(pick(sample_period, "sample_period")),
+            migration_limit=migration_limit)
+
+    def init(self, n_pages, k, machine):
+        return HeMemState(
+            counts=jnp.zeros((n_pages,), jnp.float32),
+            in_fast=jnp.zeros((n_pages,), bool),
+            first_hot=jnp.full((n_pages,), jnp.inf, jnp.float32),
+            t=jnp.zeros((), jnp.int32),
+            cooling_events=jnp.zeros((), jnp.int32))
+
+    def sampling_period(self, state):
+        return jnp.asarray(self.sample_period, jnp.float32)
+
+    def min_sampling_period(self):
+        import numpy as np
+        return float(np.min(np.asarray(self.sample_period)))
+
+    def observe(self, state, observed):
+        t = state.t + 1
+        counts = state.counts + observed
+        # cooling: triggered when any page reaches the cooling threshold.
+        cool = counts.max() >= self.cooling_threshold
+        counts = jnp.where(cool, counts * 0.5, counts)
+        hot = counts >= self.hot_threshold
+        newly_hot = hot & jnp.isinf(state.first_hot)
+        first_hot = jnp.where(newly_hot, t.astype(jnp.float32),
+                              state.first_hot)
+        first_hot = jnp.where(hot, first_hot, jnp.inf)
+        return state.replace(
+            counts=counts, first_hot=first_hot, t=t,
+            cooling_events=state.cooling_events + cool.astype(jnp.int32))
+
+    def fires(self, state):
+        period = jnp.maximum(self.migration_period.astype(jnp.int32), 1)
+        return (state.t % period) == 0
+
+    def policy(self, state, slow_bw, app_bw, k):
+        n = state.counts.shape[0]
+        hot = state.counts >= self.hot_threshold
+        want, n_want = ranked_take(                        # FIFO order
+            state.first_hot, hot & ~state.in_fast,
+            self.pad_promote(n, k), self.migration_limit)
+        # without enough cold victims, promotions stall (paper §3.2
+        # "Inaccurate cooling threshold" -> zero cold pages in DRAM).
+        victims, _, n_take = capacity_victims(
+            state.in_fast, state.counts, state.in_fast & ~hot, n_want, k,
+            self.pad_demote(n, k))
+        promote = truncate_ranked(want, n_take)
+        in_fast = scatter_set(state.in_fast, victims, False)
+        in_fast = scatter_set(in_fast, promote, True)
+        return state.replace(in_fast=in_fast), promote, victims
+
+
+class HeMemPolicy(LegacyPolicyAdapter):
+    """HeMem for the numpy reference engine (functional spec under the hood).
+
+    Subclasses may override the ``migration_limit`` class attribute (the
+    greedy-capacity test does); it is forwarded into the spec.
+    """
+
+    migration_limit = 12
 
     def __init__(self, hot_threshold=None, cooling_threshold=None,
                  migration_period=None, sample_period=None):
-        self.hot_threshold = DEFAULTS["hot_threshold"] \
-            if hot_threshold is None else float(hot_threshold)
-        self.cooling_threshold = DEFAULTS["cooling_threshold"] \
-            if cooling_threshold is None else float(cooling_threshold)
-        self.migration_period = DEFAULTS["migration_period"] \
-            if migration_period is None else int(migration_period)
-        self._sample_period = DEFAULTS["sample_period"] \
-            if sample_period is None else float(sample_period)
-
-    def reset(self, n_pages, k, machine):
-        self.n, self.k = n_pages, k
-        self.counts = np.zeros(n_pages)
-        self.in_fast = np.zeros(n_pages, bool)
-        self.first_hot = np.full(n_pages, np.inf)  # FIFO discovery order
-        self.t = 0
-        self.cooling_events = 0
-
-    def sampling_period(self):
-        return self._sample_period
-
-    def step(self, observed, slow_bw_frac, app_bw_frac):
-        self.t += 1
-        self.counts += observed
-        # cooling: triggered when any page reaches the cooling threshold.
-        if self.counts.max() >= self.cooling_threshold:
-            self.counts *= 0.5
-            self.cooling_events += 1
-
-        hot = self.counts >= self.hot_threshold
-        newly_hot = hot & np.isinf(self.first_hot)
-        self.first_hot[newly_hot] = self.t
-        self.first_hot[~hot] = np.inf
-
-        if self.t % self.migration_period:
-            return np.empty(0, np.int64), np.empty(0, np.int64)
-
-        want = np.flatnonzero(hot & ~self.in_fast)
-        want = want[np.argsort(self.first_hot[want], kind="stable")]  # FIFO
-        want = want[: self.migration_limit]
-
-        free = self.k - int(self.in_fast.sum())
-        need_victims = max(0, len(want) - free)
-        cold_in_fast = np.flatnonzero(self.in_fast & ~hot)
-        victims = cold_in_fast[np.argsort(self.counts[cold_in_fast],
-                                          kind="stable")][:need_victims]
-        # without enough cold victims, promotions stall (paper §3.2
-        # "Inaccurate cooling threshold" -> zero cold pages in DRAM).
-        want = want[: free + len(victims)]
-        self.in_fast[victims] = False
-        self.in_fast[want] = True
-        return want, victims
+        super().__init__(HeMemSpec.make(
+            hot_threshold, cooling_threshold, migration_period,
+            sample_period, migration_limit=type(self).migration_limit))

@@ -10,56 +10,92 @@ hot-set churn in TPC-C-like ("latest") workloads.
 """
 from __future__ import annotations
 
-import numpy as np
+import jax
+import jax.numpy as jnp
 
-from repro.baselines.base import Policy
+from repro.baselines.protocol import (LegacyPolicyAdapter, PolicySpec,
+                                      capacity_victims, ranked_take,
+                                      scatter_set, truncate_ranked)
+from repro.utils.pytree import pytree_dataclass
+
+DEFAULTS = dict(cooling_period_samples=2e6, adaptation_period=10)
 
 
-class MemtisPolicy(Policy):
+@pytree_dataclass
+class MemtisState:
+    counts: jnp.ndarray        # f32 [n]
+    in_fast: jnp.ndarray      # bool [n]
+    samples_seen: jnp.ndarray  # f32, since last cooling
+    hot_threshold: jnp.ndarray  # f32, histogram-adapted
+    t: jnp.ndarray            # i32
+    cooling_events: jnp.ndarray  # i32
+
+
+@pytree_dataclass(meta=("migration_limit",))
+class MemtisSpec(PolicySpec):
+    cooling_period_samples: jnp.ndarray
+    adaptation_period: jnp.ndarray    # i32
+    migration_limit: int = 12  # kernel kmigrated-style serial migration
+
     name = "memtis"
-    migration_limit = 12   # kernel kmigrated-style serial migration
+
+    @classmethod
+    def make(cls, cooling_period_samples=None, adaptation_period=None,
+             migration_limit: int = 12) -> "MemtisSpec":
+        pick = lambda v, key: DEFAULTS[key] if v is None else v
+        return cls(
+            cooling_period_samples=jnp.float32(
+                pick(cooling_period_samples, "cooling_period_samples")),
+            adaptation_period=jnp.int32(
+                pick(adaptation_period, "adaptation_period")),
+            migration_limit=migration_limit)
+
+    def init(self, n_pages, k, machine):
+        return MemtisState(
+            counts=jnp.zeros((n_pages,), jnp.float32),
+            in_fast=jnp.zeros((n_pages,), bool),
+            samples_seen=jnp.zeros((), jnp.float32),
+            hot_threshold=jnp.ones((), jnp.float32),
+            t=jnp.zeros((), jnp.int32),
+            cooling_events=jnp.zeros((), jnp.int32))
+
+    def observe(self, state, observed):
+        counts = state.counts + observed
+        samples = state.samples_seen + observed.sum()
+        # static-period cooling (the pathology the paper highlights).
+        cool = samples >= self.cooling_period_samples
+        counts = jnp.where(cool, counts * 0.5, counts)
+        samples = jnp.where(cool, 0.0, samples)
+        return state.replace(
+            counts=counts, samples_seen=samples, t=state.t + 1,
+            cooling_events=state.cooling_events + cool.astype(jnp.int32))
+
+    def policy(self, state, slow_bw, app_bw, k):
+        n = state.counts.shape[0]
+        # histogram-based threshold: smallest thr with |hot| <= k (k-th
+        # largest count via top_k — full sorts are pathological on CPU XLA).
+        adapt_every = jnp.maximum(self.adaptation_period.astype(jnp.int32), 1)
+        thr = jnp.maximum(jax.lax.top_k(state.counts, k)[0][k - 1], 1.0)
+        hot_threshold = jnp.where((state.t % adapt_every) == 0, thr,
+                                  state.hot_threshold)
+        hot = state.counts >= hot_threshold
+        want, n_want = ranked_take(                    # hottest-first
+            -state.counts, hot & ~state.in_fast,
+            self.pad_promote(n, k), self.migration_limit)
+        victims, _, n_take = capacity_victims(
+            state.in_fast, state.counts, state.in_fast & ~hot, n_want, k,
+            self.pad_demote(n, k))
+        promote = truncate_ranked(want, n_take)
+        in_fast = scatter_set(state.in_fast, victims, False)
+        in_fast = scatter_set(in_fast, promote, True)
+        return (state.replace(in_fast=in_fast, hot_threshold=hot_threshold),
+                promote, victims)
+
+
+class MemtisPolicy(LegacyPolicyAdapter):
+    """Memtis for the numpy reference engine (functional spec underneath)."""
 
     def __init__(self, cooling_period_samples: float = 2e6,
                  adaptation_period: int = 10):
-        self.cooling_period_samples = float(cooling_period_samples)
-        self.adaptation_period = int(adaptation_period)
-
-    def reset(self, n_pages, k, machine):
-        self.n, self.k = n_pages, k
-        self.counts = np.zeros(n_pages)
-        self.in_fast = np.zeros(n_pages, bool)
-        self.samples_seen = 0.0
-        self.t = 0
-        self.hot_threshold = 1.0
-        self.cooling_events = 0
-
-    def step(self, observed, slow_bw_frac, app_bw_frac):
-        self.t += 1
-        self.counts += observed
-        self.samples_seen += float(observed.sum())
-        # static-period cooling (the pathology the paper highlights).
-        if self.samples_seen >= self.cooling_period_samples:
-            self.counts *= 0.5
-            self.samples_seen = 0.0
-            self.cooling_events += 1
-
-        if self.t % self.adaptation_period == 0:
-            # histogram-based threshold: smallest thr with |hot| <= k.
-            order = np.sort(self.counts)[::-1]
-            thr = order[self.k - 1] if self.k <= len(order) else 0.0
-            self.hot_threshold = max(thr, 1.0)
-
-        hot = self.counts >= self.hot_threshold
-        want = np.flatnonzero(hot & ~self.in_fast)
-        want = want[np.argsort(self.counts[want])[::-1]]
-        want = want[: self.migration_limit]
-
-        free = self.k - int(self.in_fast.sum())
-        need_victims = max(0, len(want) - free)
-        cold_in_fast = np.flatnonzero(self.in_fast & ~hot)
-        victims = cold_in_fast[np.argsort(self.counts[cold_in_fast],
-                                          kind="stable")][:need_victims]
-        want = want[: free + len(victims)]
-        self.in_fast[victims] = False
-        self.in_fast[want] = True
-        return want, victims
+        super().__init__(MemtisSpec.make(cooling_period_samples,
+                                         adaptation_period))

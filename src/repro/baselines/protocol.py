@@ -1,0 +1,230 @@
+"""Functional policy protocol: pure ``init``/``step`` over pytree state.
+
+Every tiering policy — ARMS and all baselines — is expressed as a
+``PolicySpec``: a pytree dataclass whose *leaves* are the policy's tunable
+knobs (f32/i32 scalars, batchable into sweep lanes) and whose *meta* fields
+are static shape/identity data (name, pad widths, flags).  The behaviour is
+a set of pure, jittable functions over an immutable ``PolicyState`` pytree:
+
+    state = spec.init(n_pages, k, machine)
+    state = spec.observe(state, observed)        # cheap, every interval
+    fire  = spec.fires(state)                    # is the policy pass due?
+    state, promote, demote = spec.policy(state, slow_bw, app_bw, k)
+    state, promote, demote = spec.step(state, observed, slow_bw, app_bw, k)
+
+``step`` is the composed reference semantics (observe + cond(fires) around
+policy).  The split exists so the compiled scan engine can hoist the
+cadence gate to a *scalar* ``lax.cond`` across sweep lanes (see
+scan_engine.py) while the numpy reference engine uses ``step`` as-is.
+
+Padded-index contract
+---------------------
+``promote``/``demote`` are fixed-shape i32 arrays of widths
+``spec.pad_promote(n, k)`` / ``spec.pad_demote(n, k)``.  Entries equal to
+the sentinel ``-1`` are padding and are skipped; the remaining entries are
+page indices in priority order (hottest/most-urgent first).  The engines
+execute demotions first, then promotions capped by free capacity — see
+``simjax.apply_padded_migrations`` (scan engine) and the variable-length
+equivalent in ``engine.run`` (numpy engine); both agree exactly (property-
+tested in tests/test_policy_protocol.py).
+
+``LegacyPolicyAdapter`` wraps a spec back into the stateful ``Policy``
+interface so the numpy reference engine keeps replaying every policy with
+bitwise-identical decisions — that cross-engine agreement is the
+correctness oracle for the compiled scan engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.base import Policy
+
+SENTINEL = -1
+
+
+# --------------------------------------------------------------- helpers
+def ranked_take(key, mask, pad: int, limit=None):
+    """First ``limit`` indices of ``mask`` ordered by ``key`` ascending.
+
+    Ties break by ascending page index (jnp.argsort is stable), matching a
+    stable numpy argsort applied over ``np.flatnonzero(mask)``.  Returns a
+    ``pad``-wide sentinel-padded i32 index array (valid entries form a
+    prefix) plus the valid count.  ``limit`` may be a traced scalar or
+    static int; ``None`` keeps every masked index (up to ``pad``).
+    """
+    n = key.shape[0]
+    pad = max(1, min(pad, n))
+    # top_k, not argsort: XLA's generic sort is ~50x slower on CPU at
+    # simulator scale, and top_k's tie rule (lower index first) matches a
+    # stable ascending argsort exactly.
+    _, order = jax.lax.top_k(jnp.where(mask, -key.astype(jnp.float32),
+                                       -jnp.inf), pad)
+    order = order.astype(jnp.int32)
+    count = mask.sum().astype(jnp.int32)
+    if limit is not None:
+        count = jnp.minimum(count, jnp.asarray(limit, jnp.int32))
+    count = jnp.minimum(count, pad)
+    keep = jnp.arange(pad, dtype=jnp.int32) < count
+    return jnp.where(keep, order, SENTINEL), count
+
+
+def truncate_ranked(idx, count):
+    """Keep the first ``count`` valid (prefix) entries of a ranked list."""
+    keep = jnp.arange(idx.shape[0], dtype=jnp.int32) < count
+    return jnp.where(keep, idx, SENTINEL)
+
+
+def scatter_set(dst, idx, value: bool):
+    """Set ``dst[idx] = value`` for non-sentinel entries of ``idx``."""
+    n = dst.shape[0]
+    safe = jnp.where(idx >= 0, idx, n)
+    return dst.at[safe].set(value, mode="drop")
+
+
+# ---------------------------------------------------------------- protocol
+class PolicySpec:
+    """Base of the functional policy protocol (subclass + pytree_dataclass).
+
+    Class attributes are static protocol metadata; dataclass fields are the
+    knob leaves.  All methods must be pure and traceable; ``self``'s leaves
+    may be traced arrays (batched sweep lanes under vmap).
+    """
+
+    name: str = "base"
+    #: pages migrated per policy pass; models serial (kernel-thread) vs
+    #: batched (Nimble/ARMS) migration mechanisms.  Specs that sweep shape-
+    #: relevant knobs keep this a static meta field instead.
+    migration_limit: int = 10 ** 9
+    #: observed counts are TRUE counts (oracle upper bound), not PEBS samples
+    wants_true_counts: bool = False
+    #: per-slow-access application overhead of the policy mechanism (TPP
+    #: NUMA hint faults); charged by both engines.
+    slow_access_extra_ns: float = 0.0
+    #: whether sampling_period/mode depend on runtime state (ARMS) or are
+    #: constant per spec (every baseline).
+    dynamic_sampling_period: bool = False
+    has_mode: bool = False
+
+    DEFAULT_SAMPLE_PERIOD = 10_000.0
+
+    # --- static shape contract -------------------------------------------
+    def pad_promote(self, n: int, k: int) -> int:
+        return max(1, min(n, self.migration_limit))
+
+    def pad_demote(self, n: int, k: int) -> int:
+        return max(1, min(n, self.migration_limit))
+
+    # --- pure functions over pytree state --------------------------------
+    def init(self, n_pages: int, k: int, machine):
+        raise NotImplementedError
+
+    def observe(self, state, observed):
+        """Cheap per-interval accumulation (counts, faults, buffers)."""
+        return state
+
+    def fires(self, state):
+        """Scalar bool: does the (expensive) policy pass run this interval?"""
+        return jnp.asarray(True)
+
+    def sampling_period(self, state):
+        return jnp.float32(self.DEFAULT_SAMPLE_PERIOD)
+
+    def min_sampling_period(self) -> float:
+        """Host-side lower bound on the sampling period (static shapes)."""
+        return float(self.DEFAULT_SAMPLE_PERIOD)
+
+    def mode_of(self, state):
+        """Controller mode for the SimResult timeline (ARMS; 0 elsewhere)."""
+        return jnp.zeros((), jnp.int32)
+
+    def policy(self, state, slow_bw, app_bw, k: int):
+        """-> (state, promote, demote): the full policy pass.
+
+        ``promote``/``demote`` follow the padded-index contract (module
+        docstring).  Only called on intervals where ``fires(state)``.
+        """
+        raise NotImplementedError
+
+    def step(self, state, observed, slow_bw, app_bw, k: int):
+        """Reference composition: observe, then cond(fires) around policy."""
+        n = observed.shape[0]
+        state = self.observe(state, observed)
+        pad_p, pad_d = self.pad_promote(n, k), self.pad_demote(n, k)
+
+        def fire(s):
+            return self.policy(s, slow_bw, app_bw, k)
+
+        def skip(s):
+            return (s, jnp.full((pad_p,), SENTINEL, jnp.int32),
+                    jnp.full((pad_d,), SENTINEL, jnp.int32))
+
+        return jax.lax.cond(self.fires(state), fire, skip, state)
+
+
+def capacity_victims(in_fast, cold_key, cold_mask, n_want, k: int, pad_d: int,
+                     extra_need=0):
+    """Shared victim selection: free slots, then coldest-first demotions.
+
+    Returns (victims, n_victims, n_take) where ``n_take`` caps the
+    promotion list at ``free + n_victims`` (the engines never exceed
+    capacity, so a policy that respects this bound sees every request
+    executed and its internal residency belief stays exact).
+    """
+    free = (k - in_fast.sum()).astype(jnp.int32)
+    need = jnp.maximum(jnp.maximum(n_want - free, extra_need), 0)
+    victims, n_vict = ranked_take(cold_key, cold_mask, pad_d, need)
+    n_take = jnp.minimum(n_want, free + n_vict)
+    return victims, n_vict, n_take
+
+
+# ----------------------------------------------------------- legacy bridge
+@functools.partial(jax.jit, static_argnames=("k",))
+def _protocol_step(spec, state, observed, slow_bw, app_bw, k: int):
+    return spec.step(state, observed, slow_bw, app_bw, k)
+
+
+class LegacyPolicyAdapter(Policy):
+    """A functional ``PolicySpec`` exposed as a stateful numpy-engine Policy.
+
+    The adapter holds the pytree state between intervals and calls the
+    spec's jitted ``step`` once per interval; padded outputs are converted
+    to the engine's variable-length index lists by dropping sentinels (order
+    preserved).  Decisions are therefore bitwise-identical to the compiled
+    scan engine's — the basis of the cross-engine equivalence tests.
+    """
+
+    def __init__(self, spec: PolicySpec):
+        self.spec = spec
+        self.name = spec.name
+        self.slow_access_extra_ns = spec.slow_access_extra_ns
+
+    def reset(self, n_pages, k, machine):
+        self.n, self.k = n_pages, k
+        self.state = self.spec.init(n_pages, k, machine)
+        self._period = float(self.spec.sampling_period(self.state))
+
+    def sampling_period(self):
+        return self._period
+
+    def wants_true_counts(self):
+        return self.spec.wants_true_counts
+
+    @property
+    def mode(self) -> int:
+        if not type(self.spec).has_mode:
+            return 0
+        return int(self.spec.mode_of(self.state))
+
+    def step(self, observed, slow_bw_frac, app_bw_frac):
+        self.state, promote, demote = _protocol_step(
+            self.spec, self.state, jnp.asarray(observed, jnp.float32),
+            jnp.float32(slow_bw_frac), jnp.float32(app_bw_frac), self.k)
+        if type(self.spec).dynamic_sampling_period:
+            self._period = float(self.spec.sampling_period(self.state))
+        promote = np.asarray(promote, np.int64)
+        demote = np.asarray(demote, np.int64)
+        return promote[promote >= 0], demote[demote >= 0]

@@ -2,40 +2,90 @@
 an oracle upper bound (true-count top-k, instant migration)."""
 from __future__ import annotations
 
-import numpy as np
+import jax
+import jax.numpy as jnp
 
-from repro.baselines.base import Policy
+from repro.baselines.protocol import (LegacyPolicyAdapter, PolicySpec,
+                                      ranked_take)
+from repro.utils.pytree import pytree_dataclass
 
 
-class AllSlowPolicy(Policy):
+@pytree_dataclass
+class StaticState:
+    t: jnp.ndarray            # i32
+
+
+@pytree_dataclass
+class AllSlowSpec(PolicySpec):
     name = "all-slow"
 
-    def reset(self, n_pages, k, machine):
-        pass
+    def init(self, n_pages, k, machine):
+        return StaticState(t=jnp.zeros((), jnp.int32))
 
-    def step(self, observed, slow_bw_frac, app_bw_frac):
-        return np.empty(0, np.int64), np.empty(0, np.int64)
+    def observe(self, state, observed):
+        return state.replace(t=state.t + 1)
+
+    def fires(self, state):
+        return jnp.asarray(False)
+
+    def pad_promote(self, n, k):
+        return 1
+
+    def pad_demote(self, n, k):
+        return 1
+
+    def policy(self, state, slow_bw, app_bw, k):
+        empty = jnp.full((1,), -1, jnp.int32)
+        return state, empty, empty
 
 
-class OraclePolicy(Policy):
+@pytree_dataclass
+class OracleState:
+    in_fast: jnp.ndarray      # bool [n]
+    last_obs: jnp.ndarray     # f32 [n] this interval's TRUE counts
+    t: jnp.ndarray            # i32
+
+
+@pytree_dataclass
+class OracleSpec(PolicySpec):
     """Sees TRUE access counts and rebalances instantly — an upper bound on
     any sampling-based policy (migration traffic still charged)."""
 
     name = "oracle"
-    migration_limit = 10**9
+    wants_true_counts = True
 
-    def reset(self, n_pages, k, machine):
-        self.n, self.k = n_pages, k
-        self.in_fast = np.zeros(n_pages, bool)
+    def pad_promote(self, n, k):
+        return max(1, min(n, k))
 
-    def wants_true_counts(self):
-        return True
+    def pad_demote(self, n, k):
+        return max(1, min(n, k))
 
-    def step(self, observed, slow_bw_frac, app_bw_frac):
-        order = np.argsort(observed)[::-1]
-        target = np.zeros(self.n, bool)
-        target[order[: self.k]] = True
-        promote = np.flatnonzero(target & ~self.in_fast)
-        demote = np.flatnonzero(~target & self.in_fast)[: len(promote)]
-        self.in_fast = target
-        return promote, demote
+    def init(self, n_pages, k, machine):
+        return OracleState(
+            in_fast=jnp.zeros((n_pages,), bool),
+            last_obs=jnp.zeros((n_pages,), jnp.float32),
+            t=jnp.zeros((), jnp.int32))
+
+    def observe(self, state, observed):
+        return state.replace(last_obs=observed, t=state.t + 1)
+
+    def policy(self, state, slow_bw, app_bw, k):
+        n = state.last_obs.shape[0]
+        _, top = jax.lax.top_k(state.last_obs, k)     # desc, ties by index
+        target = jnp.zeros((n,), bool).at[top].set(True)
+        idx = jnp.arange(n, dtype=jnp.int32)
+        promote, n_p = ranked_take(idx, target & ~state.in_fast,
+                                   self.pad_promote(n, k))
+        demote, _ = ranked_take(idx, ~target & state.in_fast,
+                                self.pad_demote(n, k), n_p)
+        return state.replace(in_fast=target), promote, demote
+
+
+class AllSlowPolicy(LegacyPolicyAdapter):
+    def __init__(self):
+        super().__init__(AllSlowSpec())
+
+
+class OraclePolicy(LegacyPolicyAdapter):
+    def __init__(self):
+        super().__init__(OracleSpec())

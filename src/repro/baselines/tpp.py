@@ -12,57 +12,93 @@ application latency on slow-tier accesses (``slow_access_extra_ns``).
 """
 from __future__ import annotations
 
-import numpy as np
+import jax.numpy as jnp
 
-from repro.baselines.base import Policy
+from repro.baselines.protocol import (LegacyPolicyAdapter, PolicySpec,
+                                      capacity_victims, ranked_take,
+                                      scatter_set, truncate_ranked)
+from repro.utils.pytree import pytree_dataclass
+
+DEFAULTS = dict(promote_hits=2.0, watermark=0.98)
 
 
-class TPPPolicy(Policy):
+@pytree_dataclass
+class TPPState:
+    in_fast: jnp.ndarray      # bool [n]
+    faults: jnp.ndarray       # f32 [n] cumulative hint faults
+    last_access: jnp.ndarray  # i32 [n] last *sampled* access interval
+    t: jnp.ndarray            # i32
+
+
+@pytree_dataclass(meta=("migration_limit",))
+class TPPSpec(PolicySpec):
+    promote_hits: jnp.ndarray
+    watermark: jnp.ndarray
+    migration_limit: int = 12
+
     name = "tpp"
-    migration_limit = 12
     slow_access_extra_ns = 60.0   # NUMA hint-fault + TLB-shootdown amortized
 
-    def __init__(self, promote_hits: float = 2.0, watermark: float = 0.98):
-        self.promote_hits = float(promote_hits)
-        self.watermark = float(watermark)
+    @classmethod
+    def make(cls, promote_hits=None, watermark=None,
+             migration_limit: int = 12) -> "TPPSpec":
+        pick = lambda v, key: DEFAULTS[key] if v is None else v
+        return cls(promote_hits=jnp.float32(pick(promote_hits,
+                                                 "promote_hits")),
+                   watermark=jnp.float32(pick(watermark, "watermark")),
+                   migration_limit=migration_limit)
 
-    def reset(self, n_pages, k, machine):
-        self.n, self.k = n_pages, k
-        self.in_fast = np.zeros(n_pages, bool)
-        self.faults = np.zeros(n_pages)     # cumulative hint faults
-        self.last_access = np.zeros(n_pages)
-        self.t = 0
+    def pad_demote(self, n, k):
+        # watermark free-target demotions can exceed migration_limit; the
+        # victim count is still bounded by the fast-tier population.
+        return max(1, min(n, k))
 
-    def step(self, observed, slow_bw_frac, app_bw_frac):
-        self.t += 1
+    def init(self, n_pages, k, machine):
+        return TPPState(
+            in_fast=jnp.zeros((n_pages,), bool),
+            faults=jnp.zeros((n_pages,), jnp.float32),
+            last_access=jnp.zeros((n_pages,), jnp.int32),
+            t=jnp.zeros((), jnp.int32))
+
+    def observe(self, state, observed):
+        t = state.t + 1
         # hint faults only occur on slow-tier pages (fast pages are mapped).
-        self.faults += np.where(self.in_fast, 0.0, np.minimum(observed, 4.0))
-        self.last_access[observed > 0] = self.t
+        faults = state.faults + jnp.where(state.in_fast, 0.0,
+                                          jnp.minimum(observed, 4.0))
+        last_access = jnp.where(observed > 0, t, state.last_access)
+        return state.replace(faults=faults, last_access=last_access, t=t)
 
-        want = np.flatnonzero((self.faults >= self.promote_hits)
-                              & ~self.in_fast)
-        # fault-arrival order approximation: least-recently-promoted first is
-        # unknowable; the kernel processes them in fault order, which under
-        # sampling is effectively arbitrary -> index rotation (clock).
-        if len(want):
-            start = np.searchsorted(want, (self.t * 97) % self.n)
-            want = np.roll(want, -start)[: self.migration_limit]
+    def policy(self, state, slow_bw, app_bw, k):
+        n = state.faults.shape[0]
+        eligible = (state.faults >= self.promote_hits) & ~state.in_fast
+        # fault-arrival order approximation: the kernel processes faults in
+        # arrival order, which under sampling is effectively arbitrary ->
+        # index rotation (clock) starting at a per-interval offset.
+        start = (state.t * 97) % n
+        clock = (jnp.arange(n, dtype=jnp.int32) - start) % n
+        want, n_want = ranked_take(clock, eligible,
+                                   self.pad_promote(n, k),
+                                   self.migration_limit)
+        # inactive-list approximation: pages without a *sampled* access
+        # recently go first; ties in stale clock (index) order.  The
+        # watermark keeps a free-slot target even without promotions.
+        free = (k - state.in_fast.sum()).astype(jnp.int32)
+        target_free = jnp.floor((1.0 - self.watermark) * k).astype(jnp.int32)
+        victims, _, n_take = capacity_victims(
+            state.in_fast, state.last_access, state.in_fast, n_want, k,
+            self.pad_demote(n, k), extra_need=target_free - free)
+        promote = truncate_ranked(want, n_take)
+        in_fast = scatter_set(state.in_fast, victims, False)
+        in_fast = scatter_set(in_fast, promote, True)
+        faults = state.faults.at[jnp.where(promote >= 0, promote, n)].set(
+            0.0, mode="drop")
+        faults = faults.at[jnp.where(victims >= 0, victims, n)].set(
+            0.0, mode="drop")
+        return state.replace(in_fast=in_fast, faults=faults), promote, victims
 
-        victims = np.empty(0, np.int64)
-        free = self.k - int(self.in_fast.sum())
-        over = len(want) - free
-        target_free = int((1 - self.watermark) * self.k)
-        need = max(over, target_free - free, 0)
-        if need > 0:
-            fast_idx = np.flatnonzero(self.in_fast)
-            # inactive-list approximation: pages without a *sampled* access
-            # in the last interval go first; ties in stale clock order.
-            idle = self.last_access[fast_idx] < self.t
-            order = np.lexsort((self.last_access[fast_idx], ~idle))
-            victims = fast_idx[order][:need]
-        want = want[: free + len(victims)]
-        self.in_fast[victims] = False
-        self.in_fast[want] = True
-        self.faults[want] = 0.0
-        self.faults[victims] = 0.0
-        return want, victims
+
+class TPPPolicy(LegacyPolicyAdapter):
+    """TPP for the numpy reference engine (functional spec underneath)."""
+
+    def __init__(self, promote_hits: float = 2.0, watermark: float = 0.98):
+        super().__init__(TPPSpec.make(promote_hits, watermark))

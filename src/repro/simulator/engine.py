@@ -8,6 +8,13 @@ execution time, migration counts, wasteful migrations, and hot-set recall.
 Execution-time semantics: every interval carries identical application work,
 so ``exec_time = sum(interval wall times)`` — matching the paper's
 "execution time for fixed work" methodology (Fig. 2).
+
+This is the *reference* engine: policies arrive as stateful ``Policy``
+objects (today: ``protocol.LegacyPolicyAdapter`` around a functional
+``PolicySpec``), and migrations are variable-length index lists.  The
+compiled scan engine (scan_engine.py) replays the same specs with
+fixed-shape sentinel-padded migrations; under a shared CRN field
+(``sample_u``) the two agree exactly, for every policy.
 """
 from __future__ import annotations
 

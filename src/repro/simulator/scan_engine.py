@@ -1,86 +1,107 @@
-"""Compiled ``lax.scan`` simulation engine + vmapped tuning sweeps.
+"""Compiled ``lax.scan`` simulation engine + lane-batched sweeps, for EVERY
+policy speaking the functional protocol (baselines/protocol.py).
 
 The numpy engine (engine.py) replays a trace with a Python loop and one
 policy call per interval — fine as a *reference*, but host<->device
-round-trips and per-call dispatch dominate for the JAX-native ARMS policy,
-and tuning studies replay dozens of full simulations sequentially.  Here
-the entire replay — PEBS sampling, the ARMS controller, engine-side
-capacity/validity enforcement, the interval cost model, and
-wasteful/recall accounting — is one ``jax.lax.scan`` over intervals,
-compiled once and executed with zero per-interval host syncs.  On top of
-it:
+round-trips and per-call dispatch dominate, and tuning studies replay
+dozens of full simulations sequentially.  Here the entire replay — PEBS
+sampling, the policy (via its pure ``observe``/``fires``/``policy``
+functions), engine-side capacity/validity enforcement, the interval cost
+model, and wasteful/recall accounting — is one ``jax.lax.scan`` over
+intervals, compiled once and executed with zero per-interval host syncs.
+On top of it:
 
-  * ``arms_sim``            — single run, SimResult-compatible output;
-  * ``sweep_seeds``         — batched over PRNG keys (sampling-noise
+  * ``simulate``             — single run of ANY spec, SimResult output;
+  * ``sweep_seeds``          — batched over PRNG keys (sampling-noise
     study: per-lane noise drawn from keys threaded through the carry);
-  * ``sweep_arms_configs``  — batched over ARMS float knobs (the
-    "From Good to Great"-style parameter sweep).  All configs share one
-    CRN noise field, so the two observation grids (history / recency
-    sampling period) are precomputed ONCE and broadcast — config lanes
-    pay zero sampling cost.
+  * ``sweep_policy_configs`` — batched over a policy family's knobs: one
+    spec per lane, all lanes sharing one CRN noise field (paired
+    comparisons — config differences are never confounded with noise).
+    This is what makes Tuned-HeMem/Memtis/TPP one compiled dispatch each
+    (see tuning.py) instead of a sequential replay per config;
+  * ``arms_sim`` / ``sweep_arms_configs`` — the ARMS-specialized wrappers
+    (the latter precomputes both mode-dependent observation grids once and
+    broadcasts them, so ARMS config lanes pay zero sampling cost).
 
 Batching layout: sweep lanes live in an explicit leading axis of the scan
 carry rather than under an outer ``vmap`` of the whole simulation.  This
-matters: policy-cadence gating is a ``lax.cond`` on the *scalar*
+matters: the policy-pass gate is a ``lax.cond`` on the *scalar*
 ``any(lane fires)``, so on intervals where no lane's policy is due the
-controller (top-k ranking dominates the profile) is genuinely skipped —
-an outer vmap would turn that cond into a select and pay the controller
-every interval.  The controller itself is ``jax.vmap``-ed over lanes
-inside the fire branch, with per-lane config knobs rebuilt from the swept
-value vectors.
+expensive pass (top-k / sort ranking dominates the profile) is genuinely
+skipped — an outer vmap would turn that cond into a select and pay the
+policy every interval.  Inside the fire branch the policy IS ``jax.vmap``-ed
+over lanes, with per-lane knobs read from the spec's batched leaves.
 
 Engine-side bookkeeping is shared with the numpy engine via
 ``simulator/simjax.py``; with a common-random-number uniform field
 (``sample_u``) the two engines agree bitwise on sampling and interval
-arithmetic, so promotions/demotions/wasteful counts match exactly (see
-tests/test_scan_engine.py).
+arithmetic, so promotions/demotions/wasteful counts match exactly for every
+policy (see tests/test_scan_engine.py).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.controller import (SAMPLING_PERIOD_HISTORY,
-                                   SAMPLING_PERIOD_RECENCY, arms_step_impl,
-                                   policy_every, sampling_period)
-from repro.core.scheduler import observe_migration_cost
-from repro.core.state import MODE_RECENCY, ARMSConfig, MigrationPlan, \
-    init_state
-from repro.simulator import machine as machine_mod
+from repro.baselines.arms_policy import SWEEPABLE, ARMSSpec
+from repro.core.state import ARMSConfig
 from repro.simulator import simjax
 from repro.simulator.engine import SimResult, oracle_topk_masks
-from repro.simulator.sampling import (_NORMAL_SWITCH,
-                                      pebs_sample_from_uniform)
+from repro.simulator.sampling import (_NORMAL_SWITCH, pebs_sample_from_uniform,
+                                      uniform_field)
 
-# ARMSConfig float knobs that may be batched (traced) in a config sweep.
-# Shape-determining ints (bs_max) and the kernel flag must stay static.
-SWEEPABLE = frozenset({
-    "alpha_s", "alpha_l", "w_s_history", "w_l_history", "w_s_recency",
-    "w_l_recency", "pht_delta", "pht_lambda", "stabilize_eps", "noise_z",
-    "latency_fast_us", "latency_slow_us", "access_scale",
-    "migrate_cost_alpha", "init_promo_cost_us", "init_demo_cost_us",
-})
+__all__ = [
+    "SWEEPABLE", "simulate", "sweep_seeds", "sweep_policy_configs",
+    "arms_sim", "sweep_arms_configs", "last_dispatch",
+]
 
-
-def _empty_plan(B: int, bs_max: int) -> MigrationPlan:
-    i32 = jnp.int32
-    return MigrationPlan(
-        promote=jnp.full((B, bs_max), -1, i32),
-        demote=jnp.full((B, bs_max), -1, i32),
-        valid=jnp.zeros((B, bs_max), bool),
-        count=jnp.zeros((B,), i32),
-        batch_size=jnp.zeros((B,), i32))
+#: Info about the most recent compiled dispatch (lanes, sampling mode).
+#: The CI quick gate reads this to assert tuning sweeps stay lane-batched
+#: instead of silently regressing to a sequential per-config loop.
+last_dispatch: dict = {}
 
 
-def _init_carry(B: int, n: int, keys):
+def _need_normal(trace, min_period: float) -> bool:
+    """Static: can any page's sampling rate reach the normal-approx regime?
+
+    When False the ndtri branch of the sampler is dead code and statically
+    dropped; selected values are identical either way, so this never
+    affects cross-engine equivalence.
+    """
+    return bool(np.max(trace) / float(min_period) >= _NORMAL_SWITCH)
+
+
+def _bwhere(pred, a, b):
+    """Per-lane select: pred [B], leaves [B] or [B, ...]."""
+    return jax.tree_util.tree_map(
+        lambda x, y: jnp.where(pred.reshape((-1,) + (1,) * (x.ndim - 1)),
+                               x, y), a, b)
+
+
+def _lane_specs(spec, B: int):
+    """Broadcast one spec's leaves to B identical sweep lanes."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(jnp.asarray(x),
+                                   (B,) + jnp.shape(jnp.asarray(x))), spec)
+
+
+def _stack_specs(specs):
+    """Stack same-family specs leaf-wise into one lane-batched spec."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *specs)
+
+
+def _init_carry(spec, B: int, n: int, k: int, machine, keys):
     f32 = jnp.float32
+    cls = type(spec)
+    state = jax.vmap(lambda sp: cls.init(sp, n, k, machine),
+                     axis_size=B)(spec)
     return dict(
+        state=state,
         in_fast=jnp.zeros((B, n), bool),
-        buf=jnp.zeros((B, n), f32),
         promoted_at=jnp.full((B, n), -(10 ** 9), jnp.int32),
         demoted_at=jnp.full((B, n), -(10 ** 9), jnp.int32),
         t=jnp.zeros((), jnp.int32),
@@ -97,131 +118,100 @@ def _init_carry(B: int, n: int, keys):
     )
 
 
-def _need_normal(trace) -> bool:
-    """Static: can any page's sampling rate reach the normal-approx regime?
-
-    When False the ndtri branch of the sampler is dead code and statically
-    dropped; selected values are identical either way, so this never
-    affects cross-engine equivalence.
-    """
-    return bool(np.max(trace) / SAMPLING_PERIOD_RECENCY >= _NORMAL_SWITCH)
-
-
-def _bwhere(pred, a, b):
-    """Per-lane select: pred [B], leaves [B] or [B, ...]."""
-    return jax.tree_util.tree_map(
-        lambda x, y: jnp.where(pred.reshape((-1,) + (1,) * (x.ndim - 1)),
-                               x, y), a, b)
-
-
-def _simulate(trace, oracle_mask, base_cfg: ARMSConfig, k: int,
-              cfg_names: tuple, cfg_vals, mp, promo_us, demo_us, keys,
-              sample, sampling: str, need_normal: bool):
+def _simulate(spec, trace, oracle_mask, k: int, machine, mp, keys, sample,
+              sampling: str, need_normal: bool):
     """Traceable batched replay; returns a dict of [B] scalars + timelines.
 
-    Lanes (= sweep entries) form the leading axis of every carried array.
-    ``cfg_names``/``cfg_vals`` (static names, [B, F] values) rebuild a
-    per-lane ARMSConfig inside the vmapped controller; empty names = all
-    lanes share ``base_cfg``.  ``sampling`` (static) selects the PEBS noise
-    source:
+    Lanes (= sweep entries) form the leading axis of every carried array
+    and of every leaf of ``spec``.  ``sampling`` (static) selects the PEBS
+    noise source:
       * "prng": per-lane keys threaded through the carry; per-interval
         uniforms transformed by the shared Poisson inverse-CDF;
       * "crn":  ``sample`` is a [T, n] uniform field, transformed per
-        interval — the path the numpy engine mirrors bitwise;
-      * "pre":  ``sample`` is a precomputed (obs_history, obs_recency)
-        pair of [T, n] observation grids; lanes only select by mode.
+        interval with each lane's sampling period — the path the numpy
+        engine mirrors bitwise;
+      * "pre":  ``sample`` is a [T, P, n] stack of precomputed observation
+        grids (one per period in the family's ``PRE_PERIODS``); lanes only
+        select by ``spec.obs_index(state)``.
     """
     T, n = trace.shape
     B = keys.shape[0]
-    bs_max = min(base_cfg.bs_max, n)
+    cls = type(spec)
+    pad_p, pad_d = spec.pad_promote(n, k), spec.pad_demote(n, k)
     f32 = jnp.float32
 
-    def lane_cfg(vec):
-        if not cfg_names:
-            return base_cfg
-        return dataclasses.replace(
-            base_cfg, **{nm: vec[i] for i, nm in enumerate(cfg_names)})
+    vobserve = jax.vmap(cls.observe)
+    vfires = jax.vmap(cls.fires)
+    vpolicy = jax.vmap(cls.policy, in_axes=(0, 0, 0, 0, None))
+    vperiod = jax.vmap(cls.sampling_period)
+    vmode = jax.vmap(cls.mode_of)
 
-    def controller(state, counts, slow_bw, app_bw, vec):
-        cfg = lane_cfg(vec)
-        state, plan = arms_step_impl(state, counts, slow_bw, app_bw,
-                                     cfg=cfg, k=k)
-        state = jax.lax.cond(
-            plan.count > 0,
-            lambda s: observe_migration_cost(s, promo_us, demo_us, cfg),
-            lambda s: s, state)
-        return state, plan
-
-    def observed_for(xs_sample, true, mode, subs):
-        period = sampling_period(mode).astype(f32)[:, None]     # [B, 1]
+    def observed_for(xs_sample, true, state, subs):
+        if cls.wants_true_counts:
+            return jnp.broadcast_to(true[None], (B, n))
+        if sampling == "pre":
+            idx = jax.vmap(cls.obs_index)(spec, state)          # [B]
+            return xs_sample[idx]                               # [B, n]
+        period = vperiod(spec, state)[:, None]                  # [B, 1]
         if sampling == "prng":
             u = jax.vmap(lambda s: jax.random.uniform(s, (n,), dtype=f32)
                          )(subs)
             return pebs_sample_from_uniform(u, true[None], period,
                                             need_normal=need_normal)
-        if sampling == "crn":
-            return pebs_sample_from_uniform(xs_sample[None], true[None],
-                                            period, need_normal=need_normal)
-        obs_h, obs_r = xs_sample
-        return jnp.where(mode[:, None] == MODE_RECENCY, obs_r[None],
-                         obs_h[None])
+        return pebs_sample_from_uniform(xs_sample[None], true[None],
+                                        period, need_normal=need_normal)
 
     def step(c, xs):
         true, orc, xs_sample = xs
         state = c["state"]
-        mode = state.mode                                       # [B]
         split = jax.vmap(jax.random.split, out_axes=1)(c["key"])
         key, subs = split[0], split[1]
-        observed = observed_for(xs_sample, true, mode, subs)    # [B, n]
-        t = c["t"] + 1                       # 1-based policy tick (shared)
-        every = policy_every(mode)                              # [B]
-        buf = c["buf"] + observed
-        do = (t % every) == 0                                   # [B]
+        observed = observed_for(xs_sample, true, state, subs)   # [B, n]
+        t = c["t"] + 1
+        state = vobserve(spec, state, observed)
+        do = vfires(spec, state)                                # [B]
 
-        def fire(args):
-            state, buf = args
-            counts = buf / every.astype(f32)[:, None]
-            new_state, plan = jax.vmap(controller)(
-                state, counts, c["slow_bw"], c["app_bw"], cfg_vals)
-            # lanes whose policy is not due keep their state/buffer; their
-            # plan entries are invalidated so no migrations execute.
-            state = _bwhere(do, new_state, state)
-            buf = jnp.where(do[:, None], 0.0, buf)
-            plan = MigrationPlan(
-                promote=jnp.where(do[:, None], plan.promote, -1),
-                demote=jnp.where(do[:, None], plan.demote, -1),
-                valid=plan.valid & do[:, None],
-                count=jnp.where(do, plan.count, 0),
-                batch_size=jnp.where(do, plan.batch_size, 0))
-            return state, buf, plan
+        def fire(st):
+            new_state, promote, demote = vpolicy(
+                spec, st, c["slow_bw"], c["app_bw"], k)
+            # lanes whose policy is not due keep their state; their padded
+            # outputs are blanked so no migrations execute.
+            st = _bwhere(do, new_state, st)
+            promote = jnp.where(do[:, None], promote, -1)
+            demote = jnp.where(do[:, None], demote, -1)
+            return st, promote, demote
 
-        def skip(args):
-            state, buf = args
-            return state, buf, _empty_plan(B, bs_max)
+        def skip(st):
+            return (st, jnp.full((B, pad_p), -1, jnp.int32),
+                    jnp.full((B, pad_d), -1, jnp.int32))
 
-        # Scalar predicate: the controller (top-k ranking dominates its
-        # cost) only runs on intervals where at least one lane's policy
-        # cadence is due — unlike an outer vmap-of-cond, which would
-        # select-execute it every interval.
-        state, buf, plan = jax.lax.cond(jnp.any(do), fire, skip,
-                                        (state, buf))
+        # Scalar predicate: the policy pass (top-k / sort ranking dominates
+        # its cost) only runs on intervals where at least one lane's cadence
+        # is due — unlike an outer vmap-of-cond, which would select-execute
+        # it every interval.
+        state, promote, demote = jax.lax.cond(jnp.any(do), fire, skip, state)
 
         in_fast, pexec, dexec = jax.vmap(
-            simjax.apply_migrations, in_axes=(0, 0, 0, 0, None))(
-            c["in_fast"], plan.promote, plan.demote, plan.valid, k)
+            simjax.apply_padded_migrations, in_axes=(0, 0, 0, None))(
+            c["in_fast"], promote, demote, k)
         n_promo = pexec.sum(axis=1).astype(jnp.int32)           # [B]
         n_demo = dexec.sum(axis=1).astype(jnp.int32)
         waste, promoted_at, demoted_at = jax.vmap(
             simjax.wasteful_update, in_axes=(None, 0, 0, 0, 0, 0, 0))(
-            t - 1, c["promoted_at"], c["demoted_at"], plan.promote,
-            plan.demote, pexec, dexec)
+            t - 1, c["promoted_at"], c["demoted_at"], promote, demote,
+            pexec, dexec)
         acc_fast, acc_slow, wall, slow_share, app_frac = jax.vmap(
             simjax.interval_accounting, in_axes=(None, None, 0, 0, 0))(
             mp, true, in_fast, n_promo.astype(f32), n_demo.astype(f32))
+        if cls.slow_access_extra_ns:
+            # policy-mechanism overhead charged to the application (TPP's
+            # NUMA hint faults are taken on slow-tier accesses).
+            wall = wall + acc_slow * f32(cls.slow_access_extra_ns) \
+                * f32(1e-9) / mp.mlp
         recall = (in_fast & orc[None]).sum(axis=1).astype(f32) / k
 
         new_c = dict(
-            state=state, in_fast=in_fast, buf=buf,
+            state=state, in_fast=in_fast,
             promoted_at=promoted_at, demoted_at=demoted_at, t=t, key=key,
             slow_bw=slow_share, app_bw=app_frac,
             exec_time=c["exec_time"] + wall,
@@ -233,19 +223,12 @@ def _simulate(trace, oracle_mask, base_cfg: ARMSConfig, k: int,
             recall_sum=c["recall_sum"] + recall)
         ys = dict(slow=slow_share,
                   hits=acc_fast / jnp.maximum(acc_fast + acc_slow, 1e-9),
-                  mode=state.mode, promos=n_promo)
+                  mode=vmode(spec, state), promos=n_promo)
         return new_c, ys
 
     trace = jnp.asarray(trace, f32)
-    if sampling == "prng":
-        xs_sample = jnp.zeros((T, 1), f32)   # placeholder xs leaf
-    elif sampling == "crn":
-        xs_sample = jnp.asarray(sample, f32)
-    else:
-        xs_sample = sample                   # (obs_h, obs_r) [T, n] pair
-    carry = _init_carry(B, n, keys)
-    carry["state"] = jax.vmap(lambda v: init_state(n, lane_cfg(v)))(cfg_vals)
-    xs = (trace, jnp.asarray(oracle_mask, bool), xs_sample)
+    carry = _init_carry(spec, B, n, k, machine, keys)
+    xs = (trace, jnp.asarray(oracle_mask, bool), sample)
     carry, ys = jax.lax.scan(step, carry, xs)
     return dict(
         exec_time=carry["exec_time"], promotions=carry["promotions"],
@@ -258,19 +241,35 @@ def _simulate(trace, oracle_mask, base_cfg: ARMSConfig, k: int,
 
 
 @functools.partial(
-    jax.jit,
-    static_argnames=("base_cfg", "k", "cfg_names", "sampling", "need_normal"))
-def _sim_jit(trace, oracle_mask, base_cfg, k, cfg_names, cfg_vals, mp,
-             promo_us, demo_us, keys, sample, sampling, need_normal):
-    return _simulate(trace, oracle_mask, base_cfg, k, cfg_names, cfg_vals,
-                     mp, promo_us, demo_us, keys, sample, sampling,
-                     need_normal)
+    jax.jit, static_argnames=("k", "machine", "sampling", "need_normal"))
+def _sim_jit(spec, trace, oracle_mask, k, machine, mp, keys, sample,
+             sampling, need_normal):
+    return _simulate(spec, trace, oracle_mask, k, machine, mp, keys, sample,
+                     sampling, need_normal)
 
 
-def _machine_args(machine):
-    return (simjax.machine_params(machine),
-            jnp.float32(machine_mod.promo_page_us(machine)),
-            jnp.float32(machine_mod.demo_page_us(machine)))
+def _precompute_observations(trace, u, periods: tuple, need_normal: bool):
+    """[T, P, n] observation grids for a shared CRN field, one per period.
+
+    Row-by-row scan keeps the transform's intermediates small while
+    producing the full grids every sweep lane shares.
+    """
+    def row(_, xs):
+        u_t, tr_t = xs
+        return None, jnp.stack([
+            pebs_sample_from_uniform(u_t, tr_t, jnp.float32(p),
+                                     need_normal=need_normal)
+            for p in periods])
+    return jax.lax.scan(row, None, (u, trace))[1]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "machine", "periods", "need_normal"))
+def _sim_pre_jit(spec, trace, oracle_mask, k, machine, mp, keys, u, periods,
+                 need_normal):
+    obs = _precompute_observations(trace, u, periods, need_normal)
+    return _simulate(spec, trace, oracle_mask, k, machine, mp, keys, obs,
+                     "pre", need_normal)
 
 
 def _to_result(out, lane: int, name: str) -> SimResult:
@@ -299,104 +298,129 @@ def _timelines_lane_major(out):
     return out
 
 
-def arms_sim(trace, machine, k: int, cfg: ARMSConfig | None = None,
-             seed: int = 0, sample_u=None, name: str = "arms") -> SimResult:
-    """Device-resident ARMS replay of ``trace`` — scan-engine ``run()``.
+def _record_dispatch(**info):
+    last_dispatch.clear()
+    last_dispatch.update(info)
+
+
+# ------------------------------------------------------------- public API
+def simulate(spec, trace, machine, k: int, seed: int = 0, sample_u=None,
+             name: str | None = None) -> SimResult:
+    """Device-resident replay of ``trace`` under any policy spec.
 
     ``sample_u``: optional [T, n] uniform field selecting the CRN sampling
     path (pass the same field to ``engine.run(..., sample_u=...)`` for an
     exactly-comparable reference run).  Default: PEBS noise drawn with
     ``jax.random`` from a key threaded through the scan carry.
     """
-    cfg = cfg or ARMSConfig()
     trace = np.asarray(trace)
     assert 0 < k <= trace.shape[1]
     oracle = oracle_topk_masks(trace, k)
-    mp, promo_us, demo_us = _machine_args(machine)
     crn = sample_u is not None
     sample = (jnp.asarray(sample_u, jnp.float32) if crn
               else jnp.zeros((trace.shape[0], 1), jnp.float32))
     keys = jax.random.PRNGKey(seed)[None]
-    out = _sim_jit(jnp.asarray(trace, jnp.float32), jnp.asarray(oracle),
-                   cfg, k, (), jnp.zeros((1, 0), jnp.float32), mp, promo_us,
-                   demo_us, keys, sample, "crn" if crn else "prng",
-                   _need_normal(trace))
-    return _to_result(_timelines_lane_major(out), 0, name)
+    out = _sim_jit(_lane_specs(spec, 1), jnp.asarray(trace, jnp.float32),
+                   jnp.asarray(oracle), k, machine,
+                   simjax.machine_params(machine), keys, sample,
+                   "crn" if crn else "prng",
+                   _need_normal(trace, spec.min_sampling_period()))
+    _record_dispatch(lanes=1, sampling="crn" if crn else "prng",
+                     policy=spec.name)
+    return _to_result(_timelines_lane_major(out), 0, name or spec.name)
 
 
-def sweep_seeds(trace, machine, k: int, seeds, cfg: ARMSConfig | None = None
-                ) -> list[SimResult]:
-    """Batched ARMS runs over PRNG seeds: one compile, one device dispatch.
+def sweep_seeds(trace, machine, k: int, seeds, cfg: ARMSConfig | None = None,
+                spec=None) -> list[SimResult]:
+    """Batched runs over PRNG seeds: one compile, one device dispatch.
 
     Every seed's full replay runs in lockstep in the lane axis — the
     sampling-noise study (and any seed-averaged comparison) no longer pays
-    one sequential simulation per seed.
+    one sequential simulation per seed.  Defaults to ARMS (``cfg``); pass
+    any ``spec`` for a baseline.
     """
-    cfg = cfg or ARMSConfig()
+    if spec is None:
+        spec = ARMSSpec.make(base_cfg=cfg)
+    elif cfg is not None:
+        raise ValueError("pass either cfg (ARMS) or spec, not both")
     seeds = list(seeds)
     if not seeds:
         raise ValueError("sweep_seeds needs at least one seed")
     trace = np.asarray(trace)
     oracle = oracle_topk_masks(trace, k)
-    mp, promo_us, demo_us = _machine_args(machine)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    B = len(seeds)
-    out = _sim_jit(jnp.asarray(trace, jnp.float32), jnp.asarray(oracle),
-                   cfg, k, (), jnp.zeros((B, 0), jnp.float32), mp, promo_us,
-                   demo_us, keys, jnp.zeros((trace.shape[0], 1), jnp.float32),
-                   "prng", _need_normal(trace))
+    out = _sim_jit(_lane_specs(spec, len(seeds)),
+                   jnp.asarray(trace, jnp.float32), jnp.asarray(oracle), k,
+                   machine, simjax.machine_params(machine), keys,
+                   jnp.zeros((trace.shape[0], 1), jnp.float32), "prng",
+                   _need_normal(trace, spec.min_sampling_period()))
+    _record_dispatch(lanes=len(seeds), sampling="prng", policy=spec.name)
     out = _timelines_lane_major(out)
-    return [_to_result(out, i, f"arms[seed={s}]")
+    return [_to_result(out, i, f"{spec.name}[seed={s}]")
             for i, s in enumerate(seeds)]
 
 
-def _precompute_observations(trace, u, need_normal: bool):
-    """Both mode-dependent observation grids for a shared CRN field.
+def sweep_policy_configs(spec_family, trace, machine, k: int, configs,
+                         sim_seed: int = 0, sample_u=None
+                         ) -> list[SimResult]:
+    """Lane-batched sweep over one policy family's knob grid.
 
-    Row-by-row scan keeps the transform's intermediates small while
-    producing the full [T, n] grids every config lane shares.
+    ``spec_family`` is a callable mapping a config dict to a spec (e.g.
+    ``HeMemSpec.make``); ``configs`` a list of config dicts, one lane each.
+    All lanes share ONE common-random-number uniform noise field
+    (``sample_u`` or ``sampling.uniform_field(T, n, seed=sim_seed)``), so
+    config comparisons are paired — never confounded with sampling noise —
+    and the whole sweep is one compiled ``scan``+``vmap`` program.  The
+    numpy engine replaying any one config with the same field produces
+    identical migrations (the tuning-equivalence tests assert this).
     """
-    def row(_, xs):
-        u_t, tr_t = xs
-        obs_h = pebs_sample_from_uniform(
-            u_t, tr_t, jnp.float32(SAMPLING_PERIOD_HISTORY),
-            need_normal=need_normal)
-        obs_r = pebs_sample_from_uniform(
-            u_t, tr_t, jnp.float32(SAMPLING_PERIOD_RECENCY),
-            need_normal=need_normal)
-        return None, (obs_h, obs_r)
-    return jax.lax.scan(row, None, (u, trace))[1]
+    configs = list(configs)
+    if not configs:
+        raise ValueError("sweep_policy_configs needs at least one config")
+    specs = [spec_family(**cfg) for cfg in configs]
+    spec = _stack_specs(specs)
+    trace = np.asarray(trace)
+    T, n = trace.shape
+    oracle = oracle_topk_masks(trace, k)
+    if sample_u is None:
+        sample_u = uniform_field(T, n, seed=sim_seed)
+    assert sample_u.shape == (T, n)
+    min_period = min(s.min_sampling_period() for s in specs)
+    keys = jnp.stack([jax.random.PRNGKey(0)] * len(configs))
+    out = _sim_jit(spec, jnp.asarray(trace, jnp.float32),
+                   jnp.asarray(oracle), k, machine,
+                   simjax.machine_params(machine), keys,
+                   jnp.asarray(sample_u, jnp.float32), "crn",
+                   _need_normal(trace, min_period))
+    _record_dispatch(lanes=len(configs), sampling="crn",
+                     policy=specs[0].name)
+    out = _timelines_lane_major(out)
+    labels = [",".join(f"{nm}={v:.6g}" for nm, v in sorted(cfg.items()))
+              for cfg in configs]
+    return [_to_result(out, i, f"{specs[0].name}[{lbl}]")
+            for i, lbl in enumerate(labels)]
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("base_cfg", "k", "cfg_names", "need_normal"))
-def _sweep_cfg_jit(trace, oracle_mask, base_cfg, k, cfg_names, cfg_vals, mp,
-                   promo_us, demo_us, keys, u, need_normal):
-    obs = _precompute_observations(trace, u, need_normal)
-    return _simulate(trace, oracle_mask, base_cfg, k, cfg_names, cfg_vals,
-                     mp, promo_us, demo_us, keys, obs, "pre", need_normal)
+def arms_sim(trace, machine, k: int, cfg: ARMSConfig | None = None,
+             seed: int = 0, sample_u=None, name: str = "arms") -> SimResult:
+    """ARMS replay of ``trace`` — scan-engine counterpart of
+    ``engine.run(ARMSPolicy(cfg), ...)``."""
+    return simulate(ARMSSpec.make(base_cfg=cfg), trace, machine, k,
+                    seed=seed, sample_u=sample_u, name=name)
 
 
 def sweep_arms_configs(trace, machine, k: int, overrides: dict,
-                       base_cfg: ARMSConfig | None = None, seed: int = 0
-                       ) -> list[SimResult]:
+                       base_cfg: ARMSConfig | None = None, seed: int = 0,
+                       sample_u=None) -> list[SimResult]:
     """Batched ARMS runs over a grid of float knob settings.
 
     ``overrides`` maps ARMSConfig float field names to equal-length value
     lists; row b of every list forms config b.  All configs share one CRN
-    uniform noise field (paired comparisons — config differences are never
-    confounded with sampling noise), which lets the per-mode observation
-    grids be computed once and broadcast across lanes: config lanes pay
-    zero sampling cost, and the whole sweep is one compiled
-    ``scan``+``vmap`` program.
+    uniform noise field, which lets the per-mode observation grids
+    (``ARMSSpec.PRE_PERIODS``) be computed once and broadcast across
+    lanes: config lanes pay zero sampling cost, and the whole sweep is one
+    compiled ``scan``+``vmap`` program.
     """
-    base_cfg = base_cfg or ARMSConfig()
-    bad = set(overrides) - SWEEPABLE
-    if bad:
-        raise ValueError(
-            f"non-sweepable ARMSConfig fields {sorted(bad)}; sweepable: "
-            f"{sorted(SWEEPABLE)}")
     names = tuple(sorted(overrides))
     if not names:
         raise ValueError("overrides must name at least one ARMSConfig knob")
@@ -405,21 +429,24 @@ def sweep_arms_configs(trace, machine, k: int, overrides: dict,
         raise ValueError(
             "override value lists must be non-empty and of equal length; "
             f"got {({nm: len(overrides[nm]) for nm in names})}")
-    vals = np.asarray([[float(overrides[nm][b]) for nm in names]
-                       for b in range(B)], np.float32)
+    specs = [ARMSSpec.make({nm: overrides[nm][b] for nm in names},
+                           base_cfg=base_cfg) for b in range(B)]
+    spec = _stack_specs(specs)
     trace = np.asarray(trace)
     T, n = trace.shape
     oracle = oracle_topk_masks(trace, k)
-    mp, promo_us, demo_us = _machine_args(machine)
-    u = jax.random.uniform(jax.random.PRNGKey(seed), (T, n),
-                           dtype=jnp.float32)
+    if sample_u is None:
+        sample_u = uniform_field(T, n, seed=seed)
+    need_normal = _need_normal(trace, specs[0].min_sampling_period())
     keys = jnp.stack([jax.random.PRNGKey(0)] * B)
-    out = _sweep_cfg_jit(jnp.asarray(trace, jnp.float32),
-                         jnp.asarray(oracle), base_cfg, k, names,
-                         jnp.asarray(vals), mp, promo_us, demo_us, keys, u,
-                         _need_normal(trace))
+    out = _sim_pre_jit(spec, jnp.asarray(trace, jnp.float32),
+                       jnp.asarray(oracle), k, machine,
+                       simjax.machine_params(machine), keys,
+                       jnp.asarray(sample_u, jnp.float32),
+                       ARMSSpec.PRE_PERIODS, need_normal)
+    _record_dispatch(lanes=B, sampling="pre", policy="arms")
     out = _timelines_lane_major(out)
-    labels = [",".join(f"{nm}={v:.4g}" for nm, v in zip(names, row))
-              for row in vals]
+    labels = [",".join(f"{nm}={float(overrides[nm][b]):.4g}" for nm in names)
+              for b in range(B)]
     return [_to_result(out, i, f"arms[{lbl}]")
             for i, lbl in enumerate(labels)]

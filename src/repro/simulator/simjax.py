@@ -65,29 +65,41 @@ def interval_outcome(mp: MachineParams, acc_fast, acc_slow, promo_pages,
     return wall, slow_share, app_frac
 
 
-def apply_migrations(in_fast, promote, demote, valid, k: int):
+def apply_padded_migrations(in_fast, promote, demote, k: int):
     """Engine-side validation + capacity enforcement, fixed shape.
 
+    ``promote``/``demote`` follow the padded-index contract
+    (baselines/protocol.py): i32 arrays of independent widths whose ``-1``
+    entries are padding; valid entries are page indices in priority order.
     Semantics identical to the numpy engine's variable-length version:
     demotions of pages actually in the fast tier are applied first; then
     promotions of pages not (any longer) in the fast tier, in plan order,
     capped by the free capacity after demotions.
 
     Returns (in_fast, pexec, dexec): the new residency plus boolean masks
-    (aligned with the plan arrays) of the executed migrations.
+    (aligned with the padded arrays) of the executed migrations.
     """
     n = in_fast.shape[0]
-    d_safe = jnp.where(valid & (demote >= 0), demote, 0)
-    dexec = valid & (demote >= 0) & in_fast[d_safe]
+    d_safe = jnp.where(demote >= 0, demote, 0)
+    dexec = (demote >= 0) & in_fast[d_safe]
     in_fast = in_fast.at[jnp.where(dexec, demote, n)].set(False, mode="drop")
 
-    p_safe = jnp.where(valid & (promote >= 0), promote, 0)
-    p_ok = valid & (promote >= 0) & (~in_fast[p_safe])
+    p_safe = jnp.where(promote >= 0, promote, 0)
+    p_ok = (promote >= 0) & (~in_fast[p_safe])
     room = k - in_fast.sum().astype(jnp.int32)
     rank = jnp.cumsum(p_ok.astype(jnp.int32)) - 1
     pexec = p_ok & (rank < room)
     in_fast = in_fast.at[jnp.where(pexec, promote, n)].set(True, mode="drop")
     return in_fast, pexec, dexec
+
+
+def apply_migrations(in_fast, promote, demote, valid, k: int):
+    """Joint-``valid``-mask form (ARMS MigrationPlan layout) of
+    ``apply_padded_migrations``: entries with ``valid[i]`` False are treated
+    as padding in both arrays."""
+    return apply_padded_migrations(
+        in_fast, jnp.where(valid, promote, -1),
+        jnp.where(valid & (demote >= 0), demote, -1), k)
 
 
 def wasteful_update(t, promoted_at, demoted_at, promote, demote, pexec,

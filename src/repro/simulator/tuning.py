@@ -1,17 +1,23 @@
-"""Tuning studies: HeMem's knobs (paper §3) + ARMS internal-knob sweeps.
+"""Tuning studies: every baseline's knobs (paper §3) + ARMS internal knobs.
 
-The paper uses SMAC/Bayesian optimization; the search space here is small
-enough (4 knobs) that seeded random search with a modest budget finds the
-same best-region configurations.  ``tune_hemem`` returns the best-performing
-config per workload — the paper's "Tuned-HeMem" comparator.  HeMem is a
-numpy policy, so its sweep replays simulations sequentially through the
-reference engine.
+The paper uses SMAC/Bayesian optimization; the search spaces here are small
+enough that seeded random search with a modest budget finds the same
+best-region configurations.  ``tune_hemem``/``tune_memtis``/``tune_tpp``
+return the best-performing config per workload — the paper's "Tuned-X"
+comparators — and ``tune_arms`` is the internal-knob sensitivity study
+("From Good to Great"-style, paper §6).
 
-``tune_arms`` is the JAX-native equivalent (the "From Good to Great"-style
-parameter study over ARMS's internal knobs, paper §6 sensitivity): the whole
-budget runs as ONE compiled ``lax.scan`` simulation batched over configs
-(``scan_engine.sweep_arms_configs``) with a shared common-random-number
-noise field, instead of ``budget`` sequential replays.
+All four are thin wrappers over one ``tune`` entry point: the whole search
+budget runs as ONE compiled ``lax.scan`` simulation batched over config
+lanes (``scan_engine.sweep_policy_configs``), with every lane sharing a
+common-random-number noise field — paired comparisons, so row ordering
+reflects the knobs alone, and identical to replaying each config through
+the numpy reference engine with the same field (asserted in tests).
+
+Seeding is split on purpose: ``search_seed`` drives the config-grid draw,
+``sim_seed`` the CRN workload noise.  (Earlier revisions used one ``seed``
+for both, so changing the search seed silently changed the noise the
+configs were scored under.)
 """
 from __future__ import annotations
 
@@ -19,8 +25,11 @@ import itertools
 
 import numpy as np
 
-from repro.baselines.hemem import HeMemPolicy
-from repro.simulator.engine import run
+from repro.baselines.arms_policy import ARMSSpec
+from repro.baselines.hemem import HeMemSpec
+from repro.baselines.memtis import MemtisSpec
+from repro.baselines.tpp import TPPSpec
+from repro.simulator import scan_engine
 
 SPACE = dict(
     hot_threshold=[1, 2, 4, 8, 16, 32],
@@ -28,6 +37,20 @@ SPACE = dict(
     migration_period=[1, 2, 5, 10],
     sample_period=[2_500, 5_000, 10_000, 20_000],
 )
+HEMEM_DEFAULTS = dict(hot_threshold=8, cooling_threshold=18,
+                      migration_period=5, sample_period=10_000)
+
+MEMTIS_SPACE = dict(
+    cooling_period_samples=[2.5e5, 5e5, 1e6, 2e6, 4e6],
+    adaptation_period=[2, 5, 10, 20],
+)
+MEMTIS_DEFAULTS = dict(cooling_period_samples=2e6, adaptation_period=10)
+
+TPP_SPACE = dict(
+    promote_hits=[1, 2, 4, 8],
+    watermark=[0.90, 0.95, 0.98, 0.995],
+)
+TPP_DEFAULTS = dict(promote_hits=2, watermark=0.98)
 
 # ARMS internal knobs (paper §6 reports workloads are INSENSITIVE to these;
 # the sweep reproduces that claim rather than hunting per-workload optima).
@@ -38,6 +61,14 @@ ARMS_SPACE = dict(
     pht_lambda=[0.05, 0.1, 0.2],
 )
 ARMS_DEFAULTS = dict(alpha_s=0.7, alpha_l=0.1, noise_z=0.25, pht_lambda=0.10)
+
+#: name -> (spec factory taking the space's keys as kwargs, space, defaults)
+FAMILIES = {
+    "hemem": (HeMemSpec.make, SPACE, HEMEM_DEFAULTS),
+    "memtis": (MemtisSpec.make, MEMTIS_SPACE, MEMTIS_DEFAULTS),
+    "tpp": (TPPSpec.make, TPP_SPACE, TPP_DEFAULTS),
+    "arms": (lambda **cfg: ARMSSpec.make(cfg), ARMS_SPACE, ARMS_DEFAULTS),
+}
 
 
 def _sample_grid(space: dict, defaults: dict, budget: int, seed: int):
@@ -54,11 +85,7 @@ def _sample_grid(space: dict, defaults: dict, budget: int, seed: int):
 
 def sample_configs(budget: int, seed: int = 0):
     """HeMem knob draw (default config always tried)."""
-    return _sample_grid(
-        SPACE,
-        dict(hot_threshold=8, cooling_threshold=18, migration_period=5,
-             sample_period=10_000),
-        budget, seed)
+    return _sample_grid(SPACE, HEMEM_DEFAULTS, budget, seed)
 
 
 def sample_arms_configs(budget: int, seed: int = 0):
@@ -66,31 +93,57 @@ def sample_arms_configs(budget: int, seed: int = 0):
     return _sample_grid(ARMS_SPACE, ARMS_DEFAULTS, budget, seed)
 
 
-def tune_hemem(trace, machine, k, budget: int = 24, seed: int = 0):
-    """-> (best_config, best_result, all_rows sorted by exec time)."""
-    rows = []
-    for cfg in sample_configs(budget, seed):
-        res = run(HeMemPolicy(**cfg), trace, machine, k, seed=seed)
-        rows.append((cfg, res))
-    rows.sort(key=lambda cr: cr[1].exec_time_s)
+def tune(family: str, trace, machine, k, budget: int = 24,
+         search_seed: int = 0, sim_seed: int = 0, space: dict | None = None,
+         defaults: dict | None = None):
+    """Lane-batched random-search tuning for any policy family.
+
+    -> (best_config, best_result, all (config, result) rows sorted by exec
+    time).  ``search_seed`` draws the config grid; ``sim_seed`` seeds the
+    shared CRN noise field all lanes are scored under.
+    """
+    if family not in FAMILIES:
+        raise ValueError(f"unknown family {family!r}; "
+                         f"known: {sorted(FAMILIES)}")
+    make, fam_space, fam_defaults = FAMILIES[family]
+    configs = _sample_grid(space if space is not None else fam_space,
+                           defaults if defaults is not None else fam_defaults,
+                           budget, search_seed)
+    results = scan_engine.sweep_policy_configs(
+        make, trace, machine, k, configs, sim_seed=sim_seed)
+    rows = sorted(zip(configs, results), key=lambda cr: cr[1].exec_time_s)
     best_cfg, best_res = rows[0]
     return best_cfg, best_res, rows
 
 
-def tune_arms(trace, machine, k, budget: int = 24, seed: int = 0,
-              base_cfg=None):
+def tune_hemem(trace, machine, k, budget: int = 24, search_seed: int = 0,
+               sim_seed: int = 0):
+    """The paper's "Tuned-HeMem" comparator, as one compiled batched sweep."""
+    return tune("hemem", trace, machine, k, budget, search_seed, sim_seed)
+
+
+def tune_memtis(trace, machine, k, budget: int = 24, search_seed: int = 0,
+                sim_seed: int = 0):
+    return tune("memtis", trace, machine, k, budget, search_seed, sim_seed)
+
+
+def tune_tpp(trace, machine, k, budget: int = 24, search_seed: int = 0,
+             sim_seed: int = 0):
+    return tune("tpp", trace, machine, k, budget, search_seed, sim_seed)
+
+
+def tune_arms(trace, machine, k, budget: int = 24, search_seed: int = 0,
+              sim_seed: int = 0, base_cfg=None):
     """Batched ARMS internal-knob sweep: one compiled scan over all configs.
 
-    -> (best_config, best_result, all_rows sorted by exec time).  All
-    configs see identical sampling noise (shared CRN field), so row
-    ordering reflects the knobs alone.
+    Uses the ARMS-specialized sweep (precomputed per-mode observation
+    grids) rather than the generic per-interval CRN transform.
     """
-    from repro.simulator.scan_engine import sweep_arms_configs
-
-    cfgs = sample_arms_configs(budget, seed)
+    cfgs = sample_arms_configs(budget, search_seed)
     overrides = {key: [c[key] for c in cfgs] for key in ARMS_SPACE}
-    results = sweep_arms_configs(trace, machine, k, overrides,
-                                 base_cfg=base_cfg, seed=seed)
+    results = scan_engine.sweep_arms_configs(trace, machine, k, overrides,
+                                             base_cfg=base_cfg,
+                                             seed=sim_seed)
     rows = sorted(zip(cfgs, results), key=lambda cr: cr[1].exec_time_s)
     best_cfg, best_res = rows[0]
     return best_cfg, best_res, rows

@@ -1,9 +1,10 @@
 """Pytree dataclass helpers.
 
-``pytree_dataclass`` registers a frozen dataclass whose fields are ALL jax data
-(arrays / scalars) so instances flow through jit/scan/vmap.  ``static_dataclass``
-is a frozen, hashable dataclass used for configuration objects that are closed
-over (static) in jitted functions.
+``pytree_dataclass`` registers a frozen dataclass whose fields are jax data
+(arrays / scalars) so instances flow through jit/scan/vmap; fields named in
+``meta`` are hashable aux data instead (static under jit, part of the
+treedef).  ``static_dataclass`` is a frozen, hashable dataclass used for
+configuration objects that are closed over (static) in jitted functions.
 """
 from __future__ import annotations
 
@@ -16,11 +17,13 @@ def _replace(self, **kw):
     return dataclasses.replace(self, **kw)
 
 
-def pytree_dataclass(cls=None):
+def pytree_dataclass(cls=None, *, meta: tuple = ()):
     def wrap(c):
         c = dataclasses.dataclass(frozen=True)(c)
-        fields = [f.name for f in dataclasses.fields(c)]
-        jax.tree_util.register_dataclass(c, data_fields=fields, meta_fields=[])
+        fields = [f.name for f in dataclasses.fields(c)
+                  if f.name not in meta]
+        jax.tree_util.register_dataclass(c, data_fields=fields,
+                                         meta_fields=list(meta))
         c.replace = _replace
         return c
 

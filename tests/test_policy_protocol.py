@@ -1,0 +1,136 @@
+"""Functional policy protocol: padded-index contract + engine agreement.
+
+The protocol's fixed-shape sentinel-padded promote/demote arrays
+(baselines/protocol.py) must execute EXACTLY like the numpy engine's
+variable-length path when pushed through ``simjax.apply_padded_migrations``
+— for arbitrary residency/k and for every policy's actual outputs.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_fallback import given, settings, st
+
+from repro.baselines.arms_policy import ARMSSpec
+from repro.baselines.hemem import HeMemSpec
+from repro.baselines.memtis import MemtisSpec
+from repro.baselines.protocol import (SENTINEL, LegacyPolicyAdapter,
+                                      ranked_take)
+from repro.baselines.static import AllSlowSpec, OracleSpec
+from repro.baselines.tpp import TPPSpec
+from repro.simulator import simjax, workloads
+from repro.simulator.machine import PMEM_LARGE
+from repro.simulator.sampling import pebs_sample
+
+SPECS = [lambda: HeMemSpec.make(migration_period=1),
+         lambda: HeMemSpec.make(hot_threshold=1.0, cooling_threshold=1000.0,
+                                migration_period=1),
+         MemtisSpec.make, TPPSpec.make, AllSlowSpec, OracleSpec,
+         ARMSSpec.make]
+
+
+def _numpy_apply(in_fast, promote, demote, k):
+    """The numpy engine's variable-length migration path (engine.run)."""
+    in_fast = in_fast.copy()
+    promote = promote[promote >= 0]
+    demote = demote[demote >= 0]
+    demote = demote[in_fast[demote]]
+    in_fast[demote] = False
+    promote = promote[~in_fast[promote]]
+    room = k - int(in_fast.sum())
+    promote = promote[:room]
+    in_fast[promote] = True
+    return in_fast, len(promote), len(demote)
+
+
+def _assert_padded_matches_numpy(in_fast, promote, demote, k):
+    ref_fast, n_p, n_d = _numpy_apply(in_fast, promote, demote, k)
+    out_fast, pexec, dexec = simjax.apply_padded_migrations(
+        jnp.asarray(in_fast), jnp.asarray(promote, jnp.int32),
+        jnp.asarray(demote, jnp.int32), k)
+    np.testing.assert_array_equal(np.asarray(out_fast), ref_fast)
+    assert int(pexec.sum()) == n_p
+    assert int(dexec.sum()) == n_d
+
+
+class TestPaddedContractProperty:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(4, 48), st.integers(0, 2 ** 31 - 1))
+    def test_padded_apply_matches_variable_length_path(self, n, seed):
+        """Random residency + random sentinel-padded (possibly duplicate,
+        interleaved-sentinel) migration lists: both paths agree bitwise."""
+        rng = np.random.default_rng(seed)
+        in_fast = rng.random(n) < rng.random()
+        k = int(rng.integers(in_fast.sum(), n + 1))
+        for _ in range(4):
+            pad_p, pad_d = int(rng.integers(1, n + 4)), \
+                int(rng.integers(1, n + 4))
+            promote = rng.integers(-1, n, size=pad_p)
+            demote = rng.integers(-1, n, size=pad_d)
+            _assert_padded_matches_numpy(in_fast, promote, demote, k)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 40), st.integers(0, 2 ** 31 - 1))
+    def test_ranked_take_matches_stable_numpy_argsort(self, n, seed):
+        rng = np.random.default_rng(seed)
+        key = rng.integers(0, 5, size=n).astype(np.float64)  # many ties
+        mask = rng.random(n) < 0.6
+        pad = int(rng.integers(1, n + 1))
+        limit = int(rng.integers(0, n + 1))
+        idx, count = ranked_take(jnp.asarray(key, jnp.float32),
+                                 jnp.asarray(mask), pad, limit)
+        want = np.flatnonzero(mask)
+        want = want[np.argsort(key[want], kind="stable")][:min(pad, limit)]
+        got = np.asarray(idx)
+        got = got[got >= 0]
+        np.testing.assert_array_equal(got, want)
+        assert int(count) == len(want)
+
+
+class TestPolicyPaddedOutputs:
+    """Each policy's real padded outputs honor the contract and execute
+    identically through both engines' migration paths."""
+
+    @pytest.mark.parametrize("make_spec", SPECS,
+                             ids=["hemem", "hemem-greedy", "memtis", "tpp",
+                                  "all-slow", "oracle", "arms"])
+    def test_step_outputs_well_formed_and_engine_agree(self, make_spec):
+        spec = make_spec()
+        T, n, k = 40, 96, 16
+        trace = workloads.make("silo-tpcc", T=T, n=n)
+        rng = np.random.default_rng(0)
+        state = spec.init(n, k, PMEM_LARGE)
+        in_fast = np.zeros(n, bool)
+        for t in range(T):
+            observed = trace[t] if spec.wants_true_counts else pebs_sample(
+                trace[t], float(spec.sampling_period(state)), rng)
+            state, promote, demote = spec.step(
+                state, jnp.asarray(observed, jnp.float32),
+                jnp.float32(0.5), jnp.float32(0.2), k)
+            promote = np.asarray(promote)
+            demote = np.asarray(demote)
+            assert promote.shape == (spec.pad_promote(n, k),)
+            assert demote.shape == (spec.pad_demote(n, k),)
+            for arr in (promote, demote):
+                assert ((arr == SENTINEL) | ((arr >= 0) & (arr < n))).all()
+                valid = arr[arr >= 0]
+                assert len(np.unique(valid)) == len(valid)  # no duplicates
+            _assert_padded_matches_numpy(in_fast, promote, demote, k)
+            in_fast, _, _ = (np.asarray(x) for x in
+                             simjax.apply_padded_migrations(
+                                 jnp.asarray(in_fast),
+                                 jnp.asarray(promote, jnp.int32),
+                                 jnp.asarray(demote, jnp.int32), k))
+            assert in_fast.sum() <= k
+
+    def test_adapter_drops_sentinels_preserving_order(self):
+        spec = HeMemSpec.make(hot_threshold=1.0, migration_period=1)
+        pol = LegacyPolicyAdapter(spec)
+        n, k = 64, 8
+        pol.reset(n, k, PMEM_LARGE)
+        rng = np.random.default_rng(1)
+        for _ in range(6):
+            observed = rng.poisson(2.0, size=n).astype(np.float64)
+            promote, demote = pol.step(observed, 0.5, 0.2)
+            assert (promote >= 0).all() and (demote >= 0).all()
+            assert len(promote) <= spec.migration_limit
+            assert promote.dtype == np.int64
