@@ -42,8 +42,16 @@ def header():
     print("name,us_per_call,derived", flush=True)
 
 
+def spec_for(wl: str, t=T):
+    """The declarative WorkloadSpec for a named workload (scenario
+    combinators compose on top of these; scan-engine benches synthesize
+    straight from the spec with no [T, n] array)."""
+    return workloads.spec(wl, T=t)
+
+
 def trace_for(wl: str, n=N_PAGES, t=T):
-    return workloads.make(wl, T=t, n=n)
+    """Materialized f32 trace for the numpy reference engine."""
+    return spec_for(wl, t=t).materialize(t, n)
 
 
 def run_policy(policy_name: str, trace, machine=PMEM_LARGE, k=K, seed=0):

@@ -110,6 +110,52 @@ def bench_baseline_sweep_gate():
           == (ref.promotions, ref.demotions, ref.wasteful))
 
 
+# --------------------------------- CI gate: workload lanes must stay synth
+def bench_workload_sweep_gate():
+    """Quick-gate for the trace-synthesis path: a W-workload x B-config
+    tuning sweep must (a) compile to ONE dispatch with W*B lanes, (b)
+    never host-materialize a [T, n] trace (the whole point of the
+    WorkloadSpec protocol: per-lane storage O(n), not O(T*n)), and (c)
+    agree exactly with the sequential numpy reference replay of any lane
+    on the materialized trace + reconstructed CRN noise rows."""
+    from repro.baselines.hemem import HeMemPolicy
+    from repro.simulator import workload_spec
+    from repro.simulator.sampling import synth_noise_field
+
+    wls = ["gups", "silo-tpcc", "xsbench"]
+    T_, n, k, budget, sim_seed = 96, 256, 32, 4, 3
+    mat_before = workload_spec.MATERIALIZE_CALLS
+    t0 = time.time()
+    per_wl = tuning.tune("hemem", None, PMEM_LARGE, k, budget=budget,
+                         sim_seed=sim_seed, workloads=wls, T=T_, n=n)
+    wall = time.time() - t0
+    B = len(per_wl[wls[0]][2])
+    lanes = scan_engine.last_dispatch.get("lanes")
+    claim("workload sweep runs as one W*B-lane synth dispatch",
+          f"lanes={lanes} for {len(wls)} workloads x {B} configs",
+          "W*B lanes, synth=True, device CRN rows",
+          lanes == len(wls) * B
+          and scan_engine.last_dispatch.get("synth") is True
+          and scan_engine.last_dispatch.get("sampling") == "crn_prng")
+    claim("synth sweep never host-materializes a [T, n] trace",
+          f"materialize_calls_delta="
+          f"{workload_spec.MATERIALIZE_CALLS - mat_before}",
+          "0", workload_spec.MATERIALIZE_CALLS == mat_before)
+    # lane == sequential numpy replay on the materialized trace + the
+    # host-reconstructed copy of the device CRN rows
+    cfg, res = per_wl["silo-tpcc"][2][0]
+    trace = workloads.spec("silo-tpcc", T=T_).materialize(T_, n)
+    ref = run(HeMemPolicy(**cfg), trace, PMEM_LARGE, k,
+              sample_u=synth_noise_field(T_, n, seed=sim_seed))
+    emit("workload_sweep_gate.hemem", wall * 1e6,
+         f"lanes={lanes};workloads={len(wls)};configs={B}")
+    claim("synth lane == numpy replay of materialized trace (shared CRN)",
+          f"P/D/W {res.promotions}/{res.demotions}/{res.wasteful}",
+          f"numpy {ref.promotions}/{ref.demotions}/{ref.wasteful}",
+          (res.promotions, res.demotions, res.wasteful)
+          == (ref.promotions, ref.demotions, ref.wasteful))
+
+
 # ------------------------------------------------------------------ Fig. 7
 def bench_main_comparison():
     """ARMS vs HeMem/tuned-HeMem/Memtis/TPP on pmem-large."""

@@ -22,9 +22,12 @@ def main() -> None:
         pt.bench_tuning_study()
         pt.bench_tuned_baselines()
         pt.bench_arms_sweep()
-    # always-on gate: tuning sweeps must stay lane-batched in the compiled
-    # scan engine (a silent fallback to a sequential loop fails CI here).
+    # always-on gates: tuning sweeps must stay lane-batched in the compiled
+    # scan engine (a silent fallback to a sequential loop fails CI here),
+    # and workload-lane sweeps must stay on the device-synthesis path
+    # (never host-materializing a [T, n] trace).
     pt.bench_baseline_sweep_gate()
+    pt.bench_workload_sweep_gate()
     pt.bench_main_comparison()
     pt.bench_migrations()
     pt.bench_adaptivity()

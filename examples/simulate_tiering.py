@@ -8,23 +8,31 @@ tuning study runs as ONE lane-batched sweep in the compiled scan engine
 a single compiled dispatch, all configs scored under a shared CRN noise
 field.
 
+Workloads are declarative ``WorkloadSpec`` pytrees (`workloads.spec`):
+the numpy reference engine replays their materialized f32 trace, while
+the scan engine synthesizes the same counts on device with no [T, n]
+array at all — which is also how the closing phase-shift scenario below
+is run: `phases([gups, silo-tpcc])` is *declared* with a combinator, not
+hand-coded as a new generator.
+
 Run:  PYTHONPATH=src python examples/simulate_tiering.py [workload]
 """
 import sys
 
-from repro.baselines.arms_policy import ARMSPolicy
-from repro.baselines.hemem import HeMemPolicy
+from repro.baselines.arms_policy import ARMSPolicy, ARMSSpec
+from repro.baselines.hemem import HeMemPolicy, HeMemSpec
 from repro.baselines.memtis import MemtisPolicy
 from repro.baselines.static import AllSlowPolicy
 from repro.baselines.tpp import TPPPolicy
-from repro.simulator import tuning, workloads
+from repro.simulator import scan_engine, tuning, workload_spec, workloads
 from repro.simulator.engine import run
 from repro.simulator.machine import PMEM_LARGE
 
 wl = sys.argv[1] if len(sys.argv) > 1 else "gups"
 T, n = 300, 2048
 k = n // 8
-trace = workloads.make(wl, T=T, n=n)
+spec = workloads.spec(wl, T=T)            # declarative workload
+trace = spec.materialize(T, n)            # numpy-engine path (f32, [T, n])
 
 results = {}
 for name, pol in [("all-slow", AllSlowPolicy()), ("hemem", HeMemPolicy()),
@@ -54,3 +62,17 @@ print(f"\nARMS vs default HeMem: "
       f"(paper: within 3%); vs tuned-Memtis: "
       f"{tuned['memtis'].exec_time_s / a:.3f}; vs tuned-TPP: "
       f"{tuned['tpp'].exec_time_s / a:.3f}")
+
+# --- composed scenario: a phase shift DECLARED with a combinator ---------
+# First half gups (relocating hot set), second half silo-tpcc ("latest"
+# sliding window) — the paper's adaptivity story in one spec.  Runs
+# device-synthesized in the scan engine: no [T, n] trace is built.
+combo = workload_spec.phases(
+    [workloads.spec("gups", T=T), workloads.spec("silo-tpcc", T=T)], [T // 2])
+print(f"\ncomposed scenario {workload_spec.label_of(combo)} "
+      f"(device-synthesized, no [T, n] trace):")
+for name, pspec in [("hemem", HeMemSpec.make()), ("arms", ARMSSpec.make())]:
+    res = scan_engine.simulate_workload(pspec, combo, PMEM_LARGE, k, T, n)
+    print(f"  {name:6s} exec={res.exec_time_s:7.3f}s "
+          f"promotions={res.promotions:5d} wasteful={res.wasteful:4d} "
+          f"recall={res.hot_recall:.3f}")

@@ -70,14 +70,25 @@ def _crn_sampler():
 def oracle_topk_masks(trace: np.ndarray, k: int) -> np.ndarray:
     """[T, n] bool mask of each interval's true top-k pages, vectorized.
 
-    Hoisted out of the interval loop (one argpartition over the whole trace
+    Hoisted out of the interval loop (one partition over the whole trace
     instead of T per-interval ones) and shared with the scan engine so both
-    score recall against the identical oracle, ties included.
+    score recall against the identical oracle.  The tie rule matches
+    ``jax.lax.top_k`` exactly — strictly-greater values first, then
+    threshold-equal values by ascending page index — so the
+    device-computed oracle of the trace-synthesis path
+    (``scan_engine.simulate_workload``) agrees bitwise with this host mask
+    on the same f32 trace.
     """
-    idx = np.argpartition(trace, -k, axis=1)[:, -k:]
-    mask = np.zeros(trace.shape, bool)
-    np.put_along_axis(mask, idx, True, axis=1)
-    return mask
+    trace = np.asarray(trace)
+    n = trace.shape[1]
+    assert 0 < k <= n
+    kth = np.partition(trace, n - k, axis=1)[:, n - k, None]
+    greater = trace > kth
+    need = k - greater.sum(axis=1, keepdims=True, dtype=np.int32)
+    eq = trace == kth
+    # i32 cumsum: counts are bounded by n, and the default i64 temporary
+    # would be 2x the trace's own footprint at bench scale
+    return greater | (eq & (np.cumsum(eq, axis=1, dtype=np.int32) <= need))
 
 
 def run(policy: Policy, trace: np.ndarray, machine: MachineSpec, k: int,

@@ -74,3 +74,34 @@ def pebs_sample_from_uniform(u, true_counts, period, *,
 def uniform_field(T: int, n: int, seed: int = 0) -> np.ndarray:
     """Host-side CRN uniform noise field for a whole trace replay."""
     return np.random.default_rng(seed).random((T, n)).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Device-resident CRN rows for the trace-synthesis path.
+#
+# Workload-lane sweeps (scan_engine.sweep_workloads / sweep_workload_configs)
+# never build a [T, n] array anywhere: each interval draws ONE uniform row
+# from a counter-based key (fold_in by t — no consumed key chain), shared by
+# every sweep lane, so config comparisons stay paired while per-lane storage
+# stays O(n).  ``synth_noise_field`` reconstructs the same rows host-side so
+# the numpy reference engine can replay a synth run bitwise (tests only —
+# it IS the O(T*n) array the synth path avoids).
+# --------------------------------------------------------------------------
+
+def synth_uniform_row(key, t, n: int):
+    """Jittable [n] uniform row for interval ``t`` (shared across lanes)."""
+    import jax
+    import jax.numpy as jnp
+
+    return jax.random.uniform(jax.random.fold_in(key, t), (n,),
+                              dtype=jnp.float32)
+
+
+def synth_noise_field(T: int, n: int, seed: int = 0) -> np.ndarray:
+    """Host [T, n] replica of the rows a synth run draws in-scan."""
+    import jax
+    import jax.numpy as jnp
+
+    key = jax.random.PRNGKey(seed)
+    rows = jax.vmap(lambda t: synth_uniform_row(key, t, n))(jnp.arange(T))
+    return np.asarray(rows)

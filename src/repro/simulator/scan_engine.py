@@ -21,7 +21,16 @@ On top of it:
     (see tuning.py) instead of a sequential replay per config;
   * ``arms_sim`` / ``sweep_arms_configs`` — the ARMS-specialized wrappers
     (the latter precomputes both mode-dependent observation grids once and
-    broadcasts them, so ARMS config lanes pay zero sampling cost).
+    broadcasts them, so ARMS config lanes pay zero sampling cost);
+  * ``simulate_workload`` / ``sweep_workloads`` / ``sweep_workload_configs``
+    — the trace-SYNTHESIS path: instead of consuming a materialized
+    ``[T, n]`` xs trace, the scan carries ``WorkloadSpec`` state
+    (simulator/workload_spec.py) and synthesizes ``true = work * probs``
+    plus the oracle top-k mask on device each interval.  Per-lane storage
+    is O(n), nothing ``[T, n]`` exists on host or device, and workload
+    lanes batch exactly like config lanes (lane ``w * B + b`` scores
+    config b on workload w — ``tuning.tune(..., workloads=[...])`` is one
+    compiled dispatch of W*B lanes).
 
 Batching layout: sweep lanes live in an explicit leading axis of the scan
 carry rather than under an outer ``vmap`` of the whole simulation.  This
@@ -48,14 +57,15 @@ import numpy as np
 
 from repro.baselines.arms_policy import SWEEPABLE, ARMSSpec
 from repro.core.state import ARMSConfig
-from repro.simulator import simjax
+from repro.simulator import simjax, workload_spec
 from repro.simulator.engine import SimResult, oracle_topk_masks
 from repro.simulator.sampling import (_NORMAL_SWITCH, pebs_sample_from_uniform,
-                                      uniform_field)
+                                      synth_uniform_row, uniform_field)
 
 __all__ = [
     "SWEEPABLE", "simulate", "sweep_seeds", "sweep_policy_configs",
-    "arms_sim", "sweep_arms_configs", "last_dispatch",
+    "arms_sim", "sweep_arms_configs", "simulate_workload",
+    "sweep_workloads", "sweep_workload_configs", "last_dispatch",
 ]
 
 #: Info about the most recent compiled dispatch (lanes, sampling mode).
@@ -94,6 +104,21 @@ def _stack_specs(specs):
         lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *specs)
 
 
+def _stack_workloads(wl_specs):
+    """Stack WorkloadSpecs into one [W]-lane spec (component-count padded)."""
+    S = max(sp.n_components for sp in wl_specs)
+    return _stack_specs([workload_spec.pad_components(sp, S)
+                         for sp in wl_specs])
+
+
+def _topk_mask(x, k: int):
+    """Device oracle mask: exact top-k of ``x``, tie rule identical to the
+    host ``oracle_topk_masks`` (strictly-greater first, then ascending
+    index among threshold-equal values — ``lax.top_k``'s rule)."""
+    _, idx = jax.lax.top_k(x, k)
+    return jnp.zeros(x.shape, bool).at[idx].set(True)
+
+
 def _init_carry(spec, B: int, n: int, k: int, machine, keys):
     f32 = jnp.float32
     cls = type(spec)
@@ -119,22 +144,43 @@ def _init_carry(spec, B: int, n: int, k: int, machine, keys):
 
 
 def _simulate(spec, trace, oracle_mask, k: int, machine, mp, keys, sample,
-              sampling: str, need_normal: bool):
+              sampling: str, need_normal: bool, wl=None, wl_keys=None,
+              noise_key=None, wl_rep: int = 1, n: int | None = None,
+              wl_boost: bool = True):
     """Traceable batched replay; returns a dict of [B] scalars + timelines.
 
     Lanes (= sweep entries) form the leading axis of every carried array
-    and of every leaf of ``spec``.  ``sampling`` (static) selects the PEBS
-    noise source:
+    and of every leaf of ``spec``.  True counts come from one of two
+    sources:
+      * trace mode (``wl is None``): ``trace`` is a host-materialized
+        [T, n] array scanned as xs, with the host-computed ``oracle_mask``;
+      * synth mode: ``wl`` is a [W]-lane-batched ``WorkloadSpec`` whose
+        state lives in the scan carry — each interval synthesizes
+        ``true = work * probs`` on device (each workload lane feeding
+        ``wl_rep`` consecutive policy lanes) and the oracle top-k mask is
+        computed on device from the synthesized counts.  No [T, n] array
+        exists anywhere; per-lane storage is O(n).  Workload
+        re-randomization events are gated behind a scalar any-lane
+        ``lax.cond`` exactly like the policy pass.
+
+    ``sampling`` (static) selects the PEBS noise source:
       * "prng": per-lane keys threaded through the carry; per-interval
         uniforms transformed by the shared Poisson inverse-CDF;
       * "crn":  ``sample`` is a [T, n] uniform field, transformed per
         interval with each lane's sampling period — the path the numpy
         engine mirrors bitwise;
+      * "crn_prng": one uniform row per interval drawn on device from
+        ``noise_key`` (counter-based fold_in by t), shared across lanes —
+        CRN pairing without any [T, n] field (synth-mode default);
       * "pre":  ``sample`` is a [T, P, n] stack of precomputed observation
         grids (one per period in the family's ``PRE_PERIODS``); lanes only
         select by ``spec.obs_index(state)``.
     """
-    T, n = trace.shape
+    if wl is None:
+        T, n = trace.shape
+    else:
+        T = sample.shape[0]
+        wl_cls = type(wl)
     B = keys.shape[0]
     cls = type(spec)
     pad_p, pad_d = spec.pad_promote(n, k), spec.pad_demote(n, k)
@@ -146,9 +192,9 @@ def _simulate(spec, trace, oracle_mask, k: int, machine, mp, keys, sample,
     vperiod = jax.vmap(cls.sampling_period)
     vmode = jax.vmap(cls.mode_of)
 
-    def observed_for(xs_sample, true, state, subs):
+    def observed_for(xs_sample, true_b, state, subs, t0):
         if cls.wants_true_counts:
-            return jnp.broadcast_to(true[None], (B, n))
+            return true_b
         if sampling == "pre":
             idx = jax.vmap(cls.obs_index)(spec, state)          # [B]
             return xs_sample[idx]                               # [B, n]
@@ -156,17 +202,46 @@ def _simulate(spec, trace, oracle_mask, k: int, machine, mp, keys, sample,
         if sampling == "prng":
             u = jax.vmap(lambda s: jax.random.uniform(s, (n,), dtype=f32)
                          )(subs)
-            return pebs_sample_from_uniform(u, true[None], period,
+            return pebs_sample_from_uniform(u, true_b, period,
                                             need_normal=need_normal)
-        return pebs_sample_from_uniform(xs_sample[None], true[None],
+        if sampling == "crn_prng":
+            u = synth_uniform_row(noise_key, t0, n)
+            return pebs_sample_from_uniform(u[None], true_b, period,
+                                            need_normal=need_normal)
+        return pebs_sample_from_uniform(xs_sample[None], true_b,
                                         period, need_normal=need_normal)
 
     def step(c, xs):
-        true, orc, xs_sample = xs
+        if wl is None:
+            true, orc, xs_sample = xs
+            true_b = jnp.broadcast_to(true[None], (B, n))        # [B, n]
+            orc_b = jnp.broadcast_to(orc[None], (B, n))
+            wst = None
+        else:
+            xs_sample = xs
+            wst, tw = c["wl_state"], c["t"]
+            due = jax.vmap(wl_cls.event_due, in_axes=(0, 0, None))(
+                wl, wst, tw)
+            # scalar any-lane gate: permutation redraws (sorts) only run
+            # on intervals where some workload lane has an event due.
+            wst = jax.lax.cond(
+                jnp.any(due),
+                lambda s: jax.vmap(
+                    lambda w, st_: wl_cls.event(w, st_, tw, wl_boost))(
+                    wl, s),
+                lambda s: s, wst)
+            probs = jax.vmap(wl_cls.probs_of, in_axes=(0, 0, None))(
+                wl, wst, tw)                                     # [W, n]
+            workt = jax.vmap(wl_cls.work_of, in_axes=(0, 0, None))(
+                wl, wst, tw)                                     # [W]
+            true_w = workt[:, None] * probs
+            orc_w = jax.vmap(lambda x: _topk_mask(x, k))(true_w)
+            true_b = jnp.repeat(true_w, wl_rep, axis=0)          # [B, n]
+            orc_b = jnp.repeat(orc_w, wl_rep, axis=0)
         state = c["state"]
         split = jax.vmap(jax.random.split, out_axes=1)(c["key"])
         key, subs = split[0], split[1]
-        observed = observed_for(xs_sample, true, state, subs)   # [B, n]
+        observed = observed_for(xs_sample, true_b, state, subs, c["t"])
         t = c["t"] + 1
         state = vobserve(spec, state, observed)
         do = vfires(spec, state)                                # [B]
@@ -201,14 +276,14 @@ def _simulate(spec, trace, oracle_mask, k: int, machine, mp, keys, sample,
             t - 1, c["promoted_at"], c["demoted_at"], promote, demote,
             pexec, dexec)
         acc_fast, acc_slow, wall, slow_share, app_frac = jax.vmap(
-            simjax.interval_accounting, in_axes=(None, None, 0, 0, 0))(
-            mp, true, in_fast, n_promo.astype(f32), n_demo.astype(f32))
+            simjax.interval_accounting, in_axes=(None, 0, 0, 0, 0))(
+            mp, true_b, in_fast, n_promo.astype(f32), n_demo.astype(f32))
         if cls.slow_access_extra_ns:
             # policy-mechanism overhead charged to the application (TPP's
             # NUMA hint faults are taken on slow-tier accesses).
             wall = wall + acc_slow * f32(cls.slow_access_extra_ns) \
                 * f32(1e-9) / mp.mlp
-        recall = (in_fast & orc[None]).sum(axis=1).astype(f32) / k
+        recall = (in_fast & orc_b).sum(axis=1).astype(f32) / k
 
         new_c = dict(
             state=state, in_fast=in_fast,
@@ -221,14 +296,21 @@ def _simulate(spec, trace, oracle_mask, k: int, machine, mp, keys, sample,
             acc_fast_total=c["acc_fast_total"] + acc_fast,
             acc_total=c["acc_total"] + acc_fast + acc_slow,
             recall_sum=c["recall_sum"] + recall)
+        if wl is not None:
+            new_c["wl_state"] = wst
         ys = dict(slow=slow_share,
                   hits=acc_fast / jnp.maximum(acc_fast + acc_slow, 1e-9),
                   mode=vmode(spec, state), promos=n_promo)
         return new_c, ys
 
-    trace = jnp.asarray(trace, f32)
     carry = _init_carry(spec, B, n, k, machine, keys)
-    xs = (trace, jnp.asarray(oracle_mask, bool), sample)
+    if wl is None:
+        trace = jnp.asarray(trace, f32)
+        xs = (trace, jnp.asarray(oracle_mask, bool), sample)
+    else:
+        carry["wl_state"] = jax.vmap(wl_cls.init, in_axes=(0, None, 0))(
+            wl, n, wl_keys)
+        xs = sample
     carry, ys = jax.lax.scan(step, carry, xs)
     return dict(
         exec_time=carry["exec_time"], promotions=carry["promotions"],
@@ -270,6 +352,27 @@ def _sim_pre_jit(spec, trace, oracle_mask, k, machine, mp, keys, u, periods,
     obs = _precompute_observations(trace, u, periods, need_normal)
     return _simulate(spec, trace, oracle_mask, k, machine, mp, keys, obs,
                      "pre", need_normal)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "machine", "sampling", "need_normal",
+                              "wl_rep", "n", "wl_boost"))
+def _sim_synth_jit(spec, wl, k, machine, mp, keys, sample, noise_key,
+                   wl_keys, sampling, need_normal, wl_rep, n,
+                   wl_boost=True):
+    return _simulate(spec, None, None, k, machine, mp, keys, sample,
+                     sampling, need_normal, wl=wl, wl_keys=wl_keys,
+                     noise_key=noise_key, wl_rep=wl_rep, n=n,
+                     wl_boost=wl_boost)
+
+
+def _synth_need_normal(wl_specs, min_period: float) -> bool:
+    """Static host bound for synth mode: can any page's sampling rate reach
+    the normal-approx regime?  Uses the specs' work bound (probs <= 1), so
+    it may be conservatively True — the sampler's selected values are
+    identical either way (see pebs_sample_from_uniform)."""
+    return max(sp.max_rate() for sp in wl_specs) / float(min_period) \
+        >= _NORMAL_SWITCH
 
 
 def _to_result(out, lane: int, name: str) -> SimResult:
@@ -450,3 +553,125 @@ def sweep_arms_configs(trace, machine, k: int, overrides: dict,
               for b in range(B)]
     return [_to_result(out, i, f"arms[{lbl}]")
             for i, lbl in enumerate(labels)]
+
+
+# --------------------------------------------- trace synthesis (workloads)
+def simulate_workload(spec, workload, machine, k: int, T: int, n: int,
+                      sim_seed: int = 0, wl_seed: int = 0, sample_u=None,
+                      name: str | None = None) -> SimResult:
+    """Device-synthesized replay of a ``WorkloadSpec`` under any policy.
+
+    The scan engine synthesizes ``true = work * probs`` per interval from
+    the spec's pure ``step`` and computes the oracle mask on device — no
+    [T, n] trace is materialized anywhere (per-lane storage O(n)).  Under
+    the same seeds the run is bitwise-identical to replaying
+    ``workload.materialize(T, n, wl_seed)`` with the
+    ``sampling.synth_noise_field(T, n, sim_seed)`` CRN field (or with
+    ``sample_u`` if given).
+    """
+    assert 0 < k <= n
+    crn = sample_u is not None
+    if crn:
+        sample = jnp.asarray(sample_u, jnp.float32)
+        assert sample.shape == (T, n)
+    else:
+        sample = jnp.zeros((T, 1), jnp.float32)
+    wl = _stack_workloads([workload])
+    out = _sim_synth_jit(
+        _lane_specs(spec, 1), wl, k, machine, simjax.machine_params(machine),
+        jax.random.PRNGKey(0)[None], sample, jax.random.PRNGKey(sim_seed),
+        jax.random.PRNGKey(wl_seed)[None], "crn" if crn else "crn_prng",
+        _synth_need_normal([workload], spec.min_sampling_period()), 1, n,
+        wl_boost=workload.has_boost())
+    _record_dispatch(lanes=1, sampling="crn" if crn else "crn_prng",
+                     policy=spec.name, synth=True, workloads=1, configs=1)
+    label = name or f"{spec.name}@{workload_spec.label_of(workload)}"
+    return _to_result(_timelines_lane_major(out), 0, label)
+
+
+def sweep_workloads(workloads, machine, k: int, T: int, n: int,
+                    cfg: ARMSConfig | None = None, spec=None,
+                    sim_seed: int = 0, wl_seed: int = 0,
+                    names=None) -> list[SimResult]:
+    """One policy across W workload lanes: ONE compiled dispatch.
+
+    ``workloads`` is a list of ``WorkloadSpec``s (combinator outputs
+    welcome; component counts are padded to stack).  Every lane
+    synthesizes its own trace on device and all lanes share the
+    counter-based CRN noise rows, so workload comparisons are paired.
+    Defaults to ARMS (``cfg``); pass any policy ``spec`` for a baseline.
+    """
+    if spec is None:
+        spec = ARMSSpec.make(base_cfg=cfg)
+    elif cfg is not None:
+        raise ValueError("pass either cfg (ARMS) or spec, not both")
+    workloads = list(workloads)
+    if not workloads:
+        raise ValueError("sweep_workloads needs at least one workload")
+    W = len(workloads)
+    names = list(names) if names is not None else [
+        workload_spec.label_of(w, f"wl{i}") for i, w in enumerate(workloads)]
+    out = _sim_synth_jit(
+        _lane_specs(spec, W), _stack_workloads(workloads), k, machine,
+        simjax.machine_params(machine),
+        jnp.stack([jax.random.PRNGKey(0)] * W),
+        jnp.zeros((T, 1), jnp.float32), jax.random.PRNGKey(sim_seed),
+        jnp.stack([jax.random.PRNGKey(wl_seed)] * W), "crn_prng",
+        _synth_need_normal(workloads, spec.min_sampling_period()), 1, n,
+        wl_boost=any(w.has_boost() for w in workloads))
+    _record_dispatch(lanes=W, sampling="crn_prng", policy=spec.name,
+                     synth=True, workloads=W, configs=1)
+    out = _timelines_lane_major(out)
+    return [_to_result(out, i, f"{spec.name}@{nm}")
+            for i, nm in enumerate(names)]
+
+
+def sweep_workload_configs(spec_family, configs, workloads, machine, k: int,
+                           T: int, n: int, sim_seed: int = 0,
+                           wl_seed: int = 0, sample_u=None, names=None
+                           ) -> list[list[SimResult]]:
+    """W workloads x B configs as ONE compiled dispatch of W*B lanes.
+
+    Lane ``w * B + b`` scores config ``b`` on workload ``w``; each
+    workload's state is synthesized once per interval and feeds its B
+    config lanes.  All lanes share the CRN noise rows (device
+    counter-based by default; pass ``sample_u`` for an explicit field),
+    so config comparisons stay paired within and across workloads.
+    Returns results grouped per workload: ``out[w][b]``.
+    """
+    configs = list(configs)
+    workloads = list(workloads)
+    if not configs or not workloads:
+        raise ValueError("sweep_workload_configs needs >=1 config and "
+                         ">=1 workload")
+    W, B = len(workloads), len(configs)
+    names = list(names) if names is not None else [
+        workload_spec.label_of(w, f"wl{i}") for i, w in enumerate(workloads)]
+    pol_specs = [spec_family(**cfg) for cfg in configs]
+    lane_spec = _stack_specs([pol_specs[b]
+                              for _ in range(W) for b in range(B)])
+    crn = sample_u is not None
+    if crn:
+        sample = jnp.asarray(sample_u, jnp.float32)
+        assert sample.shape == (T, n)
+    else:
+        sample = jnp.zeros((T, 1), jnp.float32)
+    min_period = min(s.min_sampling_period() for s in pol_specs)
+    out = _sim_synth_jit(
+        lane_spec, _stack_workloads(workloads), k, machine,
+        simjax.machine_params(machine),
+        jnp.stack([jax.random.PRNGKey(0)] * (W * B)), sample,
+        jax.random.PRNGKey(sim_seed),
+        jnp.stack([jax.random.PRNGKey(wl_seed)] * W),
+        "crn" if crn else "crn_prng",
+        _synth_need_normal(workloads, min_period), B, n,
+        wl_boost=any(w.has_boost() for w in workloads))
+    _record_dispatch(lanes=W * B, sampling="crn" if crn else "crn_prng",
+                     policy=pol_specs[0].name, synth=True, workloads=W,
+                     configs=B)
+    out = _timelines_lane_major(out)
+    labels = [",".join(f"{nm}={v:.6g}" for nm, v in sorted(cfg.items()))
+              for cfg in configs]
+    return [[_to_result(out, w * B + b,
+                        f"{pol_specs[b].name}@{names[w]}[{labels[b]}]")
+             for b in range(B)] for w in range(W)]

@@ -29,7 +29,7 @@ from repro.baselines.arms_policy import ARMSSpec
 from repro.baselines.hemem import HeMemSpec
 from repro.baselines.memtis import MemtisSpec
 from repro.baselines.tpp import TPPSpec
-from repro.simulator import scan_engine
+from repro.simulator import scan_engine, workload_spec
 
 SPACE = dict(
     hot_threshold=[1, 2, 4, 8, 16, 32],
@@ -95,12 +95,20 @@ def sample_arms_configs(budget: int, seed: int = 0):
 
 def tune(family: str, trace, machine, k, budget: int = 24,
          search_seed: int = 0, sim_seed: int = 0, space: dict | None = None,
-         defaults: dict | None = None):
+         defaults: dict | None = None, workloads=None, T: int | None = None,
+         n: int | None = None):
     """Lane-batched random-search tuning for any policy family.
 
     -> (best_config, best_result, all (config, result) rows sorted by exec
     time).  ``search_seed`` draws the config grid; ``sim_seed`` seeds the
-    shared CRN noise field all lanes are scored under.
+    shared CRN noise all lanes are scored under.
+
+    Workload-lane mode: pass ``workloads`` (a list of workload names or
+    ``WorkloadSpec``s, plus ``T``/``n``; ``trace`` must then be None) to
+    score ONE config grid across W workloads in ONE compiled dispatch of
+    W x budget lanes — traces are synthesized on device, nothing [T, n]
+    is materialized, and the return value becomes a dict
+    ``{workload_name: (best_config, best_result, rows)}``.
     """
     if family not in FAMILIES:
         raise ValueError(f"unknown family {family!r}; "
@@ -109,6 +117,34 @@ def tune(family: str, trace, machine, k, budget: int = 24,
     configs = _sample_grid(space if space is not None else fam_space,
                            defaults if defaults is not None else fam_defaults,
                            budget, search_seed)
+    if workloads is not None:
+        if trace is not None:
+            raise ValueError("pass either trace or workloads, not both")
+        if T is None or n is None:
+            raise ValueError("workload-lane tuning needs T and n")
+        specs, names = [], []
+        for i, w in enumerate(workloads):
+            if isinstance(w, str):
+                specs.append(workload_spec.named(w, T=T))
+                names.append(w)
+            else:
+                specs.append(w)
+                names.append(workload_spec.label_of(w, f"wl{i}"))
+        # keys of the result dict: disambiguate duplicate labels (two
+        # combinator scenarios can share an auto-generated label) so no
+        # workload's rows are silently overwritten.
+        dup = {nm for nm in names if names.count(nm) > 1}
+        names = [f"{nm}#{i}" if nm in dup else nm
+                 for i, nm in enumerate(names)]
+        grid = scan_engine.sweep_workload_configs(
+            make, configs, specs, machine, k, T, n, sim_seed=sim_seed,
+            names=names)
+        out = {}
+        for nm, results in zip(names, grid):
+            rows = sorted(zip(configs, results),
+                          key=lambda cr: cr[1].exec_time_s)
+            out[nm] = (rows[0][0], rows[0][1], rows)
+        return out
     results = scan_engine.sweep_policy_configs(
         make, trace, machine, k, configs, sim_seed=sim_seed)
     rows = sorted(zip(configs, results), key=lambda cr: cr[1].exec_time_s)

@@ -1,10 +1,19 @@
-"""Workload access-trace generators (paper Table 4 analogues).
+"""Workload access-trace generators (paper Table 4 analogues) — legacy API.
 
-Each generator returns a float64 array ``[T, n_pages]`` of TRUE per-interval
-access counts; every interval carries the same amount of application work
-(``work`` accesses), so simulated execution time is directly comparable across
-policies.  PEBS-style sampling noise is applied separately (sampling.py) —
-policies never see these true counts.
+Every generator is now a thin constructor over the declarative
+``WorkloadSpec`` protocol (simulator/workload_spec.py): it builds the
+spec and host-materializes the dense ``[T, n_pages]`` float32 array of
+TRUE per-interval access counts the numpy reference engine replays.
+Every interval carries the same amount of application work (``work``
+accesses), so simulated execution time is directly comparable across
+policies.  PEBS-style sampling noise is applied separately (sampling.py)
+— policies never see these true counts.
+
+The compiled scan engine does not need these arrays at all: it
+synthesizes the same counts on device, interval by interval, directly
+from the spec (O(n) per lane instead of O(T*n) — see
+``scan_engine.simulate_workload`` / ``sweep_workloads``), bitwise
+identical to the materialized rows.
 
 The set mirrors the paper's workloads: GUPS (dynamic hot set), Silo-YCSB /
 Btree (Zipfian), Silo-TPCC ("latest" distribution), XSBench (small hot set +
@@ -16,50 +25,31 @@ from __future__ import annotations
 
 import numpy as np
 
-DEFAULT_PAGES = 4096      # 8 GiB RSS at 2 MB pages
-DEFAULT_WORK = 2.0e7      # true accesses per interval
-
-
-def _zipf_probs(n: int, s: float, rng: np.random.Generator) -> np.ndarray:
-    p = 1.0 / np.arange(1, n + 1) ** s
-    p /= p.sum()
-    return rng.permutation(p)
+from repro.simulator import workload_spec
+from repro.simulator.workload_spec import DEFAULT_PAGES, DEFAULT_WORK
 
 
 def gups(T: int, n: int = DEFAULT_PAGES, work: float = DEFAULT_WORK,
          seed: int = 0, hot_frac: float = 0.125, hot_weight: float = 0.9,
          shift_every: int = 150) -> np.ndarray:
     """Uniform accesses within a small hot set that RELOCATES periodically."""
-    rng = np.random.default_rng(seed)
-    k_hot = max(1, int(n * hot_frac))
-    trace = np.empty((T, n))
-    hot = rng.choice(n, k_hot, replace=False)
-    for t in range(T):
-        if t > 0 and t % shift_every == 0:
-            hot = rng.choice(n, k_hot, replace=False)
-        p = np.full(n, (1 - hot_weight) / (n - k_hot))
-        p[hot] = hot_weight / k_hot
-        trace[t] = work * p
-    return trace
+    return workload_spec.gups_spec(
+        work=work, seed=seed, hot_frac=hot_frac, hot_weight=hot_weight,
+        shift_every=shift_every).materialize(T, n)
 
 
 def zipfian(T: int, n: int = DEFAULT_PAGES, work: float = DEFAULT_WORK,
             seed: int = 1, s: float = 0.99, shuffle_at=()) -> np.ndarray:
-    """Static Zipf distribution (Silo YCSB-C), optional mid-run reshuffles."""
-    rng = np.random.default_rng(seed)
-    p = _zipf_probs(n, s, rng)
-    trace = np.empty((T, n))
-    for t in range(T):
-        if t in shuffle_at:
-            p = _zipf_probs(n, s, rng)
-        trace[t] = work * p
-    return trace
+    """Static Zipf distribution (Silo YCSB-C), optional one-shot mid-run
+    reshuffles (independently-permuted phases)."""
+    return workload_spec.zipf_shuffled_spec(
+        s=s, work=work, seed=seed, shuffle_at=shuffle_at).materialize(T, n)
 
 
 def btree(T: int, n: int = DEFAULT_PAGES, work: float = DEFAULT_WORK,
           seed: int = 2) -> np.ndarray:
     """Zipfian index lookups with a hot-set change mid-run (paper Fig. 9)."""
-    return zipfian(T, n, work, seed=seed, s=0.9, shuffle_at=(T // 2,))
+    return workload_spec.btree_spec(T, work=work, seed=seed).materialize(T, n)
 
 
 def silo_ycsb(T: int, n: int = DEFAULT_PAGES, work: float = DEFAULT_WORK,
@@ -76,77 +66,45 @@ def silo_tpcc(T: int, n: int = DEFAULT_PAGES, work: float = DEFAULT_WORK,
     Drift is calibrated to TPC-C-like insert rates: tens of thousands of
     txn/s filling a 2 MB page every ~50 ms -> ~2 pages per 100 ms interval.
     """
-    w = max(1, int(n * window_frac))
-    trace = np.empty((T, n))
-    decay = np.exp(-np.arange(w) / (w / 2))   # newest rows hottest
-    decay /= decay.sum()
-    for t in range(T):
-        head = int(t * drift_pages) % (n - w)
-        p = np.full(n, 0.05 / n)
-        p[head:head + w] += 0.95 * decay[::-1]
-        p /= p.sum()
-        trace[t] = work * p
-    return trace
+    return workload_spec.tpcc_spec(
+        work=work, seed=seed, window_frac=window_frac,
+        drift_pages=drift_pages).materialize(T, n)
 
 
 def xsbench(T: int, n: int = DEFAULT_PAGES, work: float = DEFAULT_WORK,
             seed: int = 5, hot_frac: float = 0.02) -> np.ndarray:
     """Small very-hot lookup tables + uniform random background over the
     whole RSS — the background makes threshold policies thrash (§3.2)."""
-    rng = np.random.default_rng(seed)
-    k_hot = max(1, int(n * hot_frac))
-    hot = rng.choice(n, k_hot, replace=False)
-    p = np.full(n, 0.5 / n)
-    p[hot] += 0.5 / k_hot
-    return np.tile(work * p, (T, 1))
-
-
-def _gapbs(T, n, work, seed, s, boost_every, boost_frac, boost_gain):
-    """Power-law degree distribution + periodic frontier boosts."""
-    rng = np.random.default_rng(seed)
-    base = _zipf_probs(n, s, rng)
-    trace = np.empty((T, n))
-    boost = np.zeros(n)
-    nb = max(1, int(n * boost_frac))
-    for t in range(T):
-        if t % boost_every == 0:
-            boost[:] = 0.0
-            boost[rng.choice(n, nb, replace=False)] = boost_gain / nb
-        p = base + boost
-        p /= p.sum()
-        trace[t] = work * p
-    return trace
+    return workload_spec.xsbench_spec(
+        work=work, seed=seed, hot_frac=hot_frac).materialize(T, n)
 
 
 def gapbs_bc(T: int, n: int = DEFAULT_PAGES, work: float = DEFAULT_WORK,
              seed: int = 6) -> np.ndarray:
-    return _gapbs(T, n, work, seed, s=0.8, boost_every=40, boost_frac=0.05,
-                  boost_gain=0.3)
+    return workload_spec.gapbs_spec(
+        s=0.8, work=work, seed=seed, boost_every=40, boost_frac=0.05,
+        boost_gain=0.3).materialize(T, n)
 
 
 def gapbs_pr(T: int, n: int = DEFAULT_PAGES, work: float = DEFAULT_WORK,
              seed: int = 7) -> np.ndarray:
-    return _gapbs(T, n, work, seed, s=0.7, boost_every=10**9, boost_frac=0.0,
-                  boost_gain=0.0)
+    return workload_spec.zipf_spec(
+        s=0.7, work=work, seed=seed).materialize(T, n)
 
 
 def gapbs_cc(T: int, n: int = DEFAULT_PAGES, work: float = DEFAULT_WORK,
              seed: int = 8) -> np.ndarray:
-    return _gapbs(T, n, work, seed, s=0.75, boost_every=100, boost_frac=0.1,
-                  boost_gain=0.2)
+    return workload_spec.gapbs_spec(
+        s=0.75, work=work, seed=seed, boost_every=100, boost_frac=0.1,
+        boost_gain=0.2).materialize(T, n)
 
 
 def liblinear(T: int, n: int = DEFAULT_PAGES, work: float = DEFAULT_WORK,
               seed: int = 9, period: int = 20, duty: float = 0.5) -> np.ndarray:
     """Periodic phases: memory-intensive Zipf sweeps alternating with
     near-idle compute phases — batched migration's best case (§7.2)."""
-    rng = np.random.default_rng(seed)
-    p = _zipf_probs(n, 0.6, rng)
-    trace = np.empty((T, n))
-    for t in range(T):
-        busy = (t % period) < duty * period
-        trace[t] = (work if busy else 0.02 * work) * p
-    return trace
+    return workload_spec.liblinear_spec(
+        work=work, seed=seed, period=period, duty=duty).materialize(T, n)
 
 
 WORKLOADS = {
@@ -162,9 +120,15 @@ WORKLOADS = {
 }
 
 
+def spec(name: str, T: int = 400, work: float = DEFAULT_WORK,
+         seed_offset: int = 0) -> workload_spec.WorkloadSpec:
+    """The ``WorkloadSpec`` behind ``make`` (seed derivation lives in
+    ``workload_spec.named``)."""
+    return workload_spec.named(name, T=T, work=work,
+                               seed_offset=seed_offset)
+
+
 def make(name: str, T: int = 400, n: int = DEFAULT_PAGES,
          work: float = DEFAULT_WORK, seed_offset: int = 0) -> np.ndarray:
-    import zlib
-    gen = WORKLOADS[name]
-    base_seed = zlib.crc32(name.encode()) % 1000  # deterministic across runs
-    return gen(T, n, work, seed=base_seed + seed_offset)
+    return spec(name, T=T, work=work, seed_offset=seed_offset).materialize(
+        T, n)
