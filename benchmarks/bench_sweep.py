@@ -149,7 +149,9 @@ def _seed_engine_run(policy, trace, machine, k, seed=0):
                             len(promote), len(demote))
         exec_time += out.wall_s
         slow_bw_frac = acc_slow / max(acc_fast + acc_slow, 1e-9)
-        app_bw_frac = out.app_bw_frac
+        # consumer-side clamp of the raw utilization ratio (engine.py does
+        # the same before the policy sees it).
+        app_bw_frac = min(1.0, out.app_bw_frac)
         np.argpartition(true, -k)  # per-interval oracle top-k (seed code)
     return exec_time
 

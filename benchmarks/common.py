@@ -12,7 +12,7 @@ from repro.baselines.static import AllSlowPolicy, OraclePolicy
 from repro.baselines.tpp import TPPPolicy
 from repro.simulator import workloads
 from repro.simulator.engine import run
-from repro.simulator.machine import MACHINES, NUMA, PMEM_LARGE
+from repro.simulator.machine import NUMA, PMEM_LARGE
 
 T, N_PAGES = 300, 2048
 K = N_PAGES // 8          # 1:8 fast:slow ratio (paper default)
@@ -54,7 +54,10 @@ def trace_for(wl: str, n=N_PAGES, t=T):
     return spec_for(wl, t=t).materialize(t, n)
 
 
-def run_policy(policy_name: str, trace, machine=PMEM_LARGE, k=K, seed=0):
+def run_policy(policy_name: str, trace, machine="pmem-large", k=K, seed=0):
+    """``machine`` may be a registry name, MachineSpec, or
+    TieredMachineSpec — resolution is one ``machines.get`` inside the
+    engine."""
     t0 = time.time()
     res = run(POLICIES[policy_name](), trace, machine, k, seed=seed)
     wall = time.time() - t0

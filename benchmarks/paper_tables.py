@@ -156,6 +156,99 @@ def bench_workload_sweep_gate():
           == (ref.promotions, ref.demotions, ref.wasteful))
 
 
+# ------------------------------- CI gate: machine sweeps must stay batched
+def bench_machine_sweep_gate():
+    """Quick-gate for the machine axis: a P-config x M-machine sweep must
+    (a) compile to ONE lane-batched dispatch covering the whole P*M
+    product — a regression to per-machine recompiles or a sequential
+    fallback fails here — with tier depths unified by neutral padding,
+    and (b) agree exactly with a standalone single-machine dispatch on
+    any lane.  Records the result in BENCH_machines.json."""
+    import json
+
+    from repro.baselines.hemem import HeMemSpec
+    from repro.simulator import experiment, workload_spec
+
+    T_, n, k, sim_seed = 96, 256, 32, 2
+    cfgs = tuning.sample_configs(4)
+    specs = [HeMemSpec.make(**c) for c in cfgs]
+    mach_names = ["pmem-large", "numa", "cxl-1hop", "dram-cxl-pmem"]
+    P, M = len(specs), len(mach_names)
+    wl = workload_spec.named("silo-tpcc", T=T_)
+
+    t0 = time.time()
+    res = experiment.sweep(specs, workloads=[wl], machines=mach_names,
+                           k=k, T=T_, n=n, sim_seed=sim_seed)
+    cold = time.time() - t0
+    t0 = time.time()
+    experiment.sweep(specs, workloads=[wl], machines=mach_names,
+                     k=k, T=T_, n=n, sim_seed=sim_seed)
+    warm = time.time() - t0
+
+    d = dict(scan_engine.last_dispatch)
+    claim("machine sweep runs as ONE P*M-lane dispatch",
+          f"lanes={d.get('lanes')} for {P} configs x {M} machines "
+          f"(mixed 2/3-tier)",
+          "P*M lanes, no per-machine recompiles or sequential fallback",
+          d.get("lanes") == P * M and d.get("machines") == M
+          and d.get("axis_product") is True)
+    single = scan_engine.simulate_workload(specs[0], wl, "dram-cxl-pmem",
+                                           k, T_, n, sim_seed=sim_seed)
+    lane = res.at(policy=0, machine="dram-cxl-pmem")
+    claim("machine-sweep lane == standalone single-machine run",
+          f"P/D/W {lane.promotions}/{lane.demotions}/{lane.wasteful}",
+          f"single {single.promotions}/{single.demotions}/"
+          f"{single.wasteful}",
+          (lane.promotions, lane.demotions, lane.wasteful)
+          == (single.promotions, single.demotions, single.wasteful))
+    emit("machine_sweep_gate.hemem", warm * 1e6,
+         f"lanes={d.get('lanes')};machines={M};configs={P};"
+         f"cold_s={cold:.3f}")
+    rec = dict(workload="silo-tpcc", n_pages=n, T=T_, k=k,
+               configs=P, machines=mach_names, lanes=d.get("lanes"),
+               sampling=d.get("sampling"), cold_s=round(cold, 3),
+               warm_s=round(warm, 3),
+               best_config_per_machine={
+                   m: min(range(P),
+                          key=lambda p: res.at(policy=p,
+                                               machine=m).exec_time_s)
+                   for m in mach_names})
+    with open("BENCH_machines.json", "w") as f:
+        json.dump(rec, f, indent=1)
+        f.write("\n")
+
+
+# --------------------------------- machine-sensitivity table (Fig. 11 ++)
+def bench_machine_sensitivity():
+    """Best-untuned policy per machine: the paper's robustness claim taken
+    across the machine axis (two-tier PMem/NUMA/CXL presets plus the
+    three-tier DRAM/CXL/PMem chain), each family's W*M grid one compiled
+    dispatch."""
+    from repro.simulator import experiment
+
+    mach_names = ["pmem-large", "numa", "cxl-1hop", "dram-cxl-pmem"]
+    pols = ["hemem", "memtis", "tpp", "arms"]
+    wls = ["gups", "silo-tpcc", "xsbench"]
+    T_, n, k = 120, 512, 64
+    t0 = time.time()
+    res = experiment.sweep(pols, workloads=wls, machines=mach_names,
+                           k=k, T=T_, n=n)
+    wall = time.time() - t0
+    ok_all = True
+    for m in mach_names:
+        geo = {p: geomean([res.at(policy=p, workload=w,
+                                  machine=m).exec_time_s for w in wls])
+               for p in pols}
+        best = min(geo, key=geo.get)
+        ok_all &= geo["arms"] <= geo[best] * 1.10
+        emit(f"machine_sensitivity.{m}", wall * 1e6 / len(mach_names),
+             f"best={best};" + ";".join(
+                 f"{p}={geo[p]:.3f}s" for p in pols))
+    claim("ARMS within 10% of best untuned policy on EVERY machine",
+          "per-machine geomeans above", "robust without re-tuning",
+          ok_all)
+
+
 # ------------------------------------------------------------------ Fig. 7
 def bench_main_comparison():
     """ARMS vs HeMem/tuned-HeMem/Memtis/TPP on pmem-large."""

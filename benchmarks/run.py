@@ -24,10 +24,14 @@ def main() -> None:
         pt.bench_arms_sweep()
     # always-on gates: tuning sweeps must stay lane-batched in the compiled
     # scan engine (a silent fallback to a sequential loop fails CI here),
-    # and workload-lane sweeps must stay on the device-synthesis path
-    # (never host-materializing a [T, n] trace).
+    # workload-lane sweeps must stay on the device-synthesis path (never
+    # host-materializing a [T, n] trace), and machine-axis sweeps must
+    # compile to ONE P*M-lane dispatch (no per-machine recompiles) —
+    # recorded in BENCH_machines.json.
     pt.bench_baseline_sweep_gate()
     pt.bench_workload_sweep_gate()
+    pt.bench_machine_sweep_gate()
+    pt.bench_machine_sensitivity()
     pt.bench_main_comparison()
     pt.bench_migrations()
     pt.bench_adaptivity()

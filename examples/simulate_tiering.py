@@ -2,59 +2,56 @@
 
 Runs ARMS against HeMem, Memtis, and TPP — each both untuned and TUNED —
 on the tiered-memory simulator (pmem-large machine model, PEBS sampling
-noise, 1:8 fast:slow ratio) and prints normalized performance.  Every
-tuning study runs as ONE lane-batched sweep in the compiled scan engine
-(`tuning.tune` -> `scan_engine.sweep_policy_configs`): the whole budget is
-a single compiled dispatch, all configs scored under a shared CRN noise
-field.
+noise, 1:8 fast:slow ratio) and prints normalized performance, then
+extends the comparison across the MACHINE axis (emulated-CXL NUMA and a
+three-tier DRAM/CXL/PMem chain) — the full robustness question of the
+paper in one axis-product call.
 
-Workloads are declarative ``WorkloadSpec`` pytrees (`workloads.spec`):
-the numpy reference engine replays their materialized f32 trace, while
-the scan engine synthesizes the same counts on device with no [T, n]
-array at all — which is also how the closing phase-shift scenario below
-is run: `phases([gups, silo-tpcc])` is *declared* with a combinator, not
-hand-coded as a new generator.
+Everything routes through the spec trilogy:
+  * policies are ``PolicySpec`` pytrees (baselines/protocol.py);
+  * workloads are ``WorkloadSpec`` pytrees (`workloads.spec`) that the
+    scan engine synthesizes on device — no [T, n] trace exists for the
+    compiled runs (the numpy reference engine replays the materialized
+    f32 trace of the same spec);
+  * machines are ``TieredMachineSpec`` pytrees resolved by registry name
+    (`machines.get`) — two- and three-tier chains batch in ONE dispatch.
+
+``experiment.sweep(policies=..., workloads=..., machines=...)`` flattens
+the axis product into lanes of one compiled dispatch per policy family;
+``tuning.tune`` rides the same API with the config grid on the policy
+axis.
 
 Run:  PYTHONPATH=src python examples/simulate_tiering.py [workload]
 """
 import sys
 
-from repro.baselines.arms_policy import ARMSPolicy, ARMSSpec
-from repro.baselines.hemem import HeMemPolicy, HeMemSpec
-from repro.baselines.memtis import MemtisPolicy
-from repro.baselines.static import AllSlowPolicy
-from repro.baselines.tpp import TPPPolicy
-from repro.simulator import scan_engine, tuning, workload_spec, workloads
-from repro.simulator.engine import run
-from repro.simulator.machine import PMEM_LARGE
+from repro.simulator import experiment, tuning, workload_spec, workloads
 
 wl = sys.argv[1] if len(sys.argv) > 1 else "gups"
 T, n = 300, 2048
 k = n // 8
 spec = workloads.spec(wl, T=T)            # declarative workload
-trace = spec.materialize(T, n)            # numpy-engine path (f32, [T, n])
 
-results = {}
-for name, pol in [("all-slow", AllSlowPolicy()), ("hemem", HeMemPolicy()),
-                  ("memtis", MemtisPolicy()), ("tpp", TPPPolicy()),
-                  ("arms", ARMSPolicy())]:
-    results[name] = run(pol, trace, PMEM_LARGE, k)
+# --- untuned comparison: one axis-product sweep (policy axis) ------------
+POLICIES = ["all-slow", "hemem", "memtis", "tpp", "arms"]
+res = experiment.sweep(POLICIES, workloads=[spec], machines=["pmem-large"],
+                       k=k, T=T, n=n)
+results = {p: res.at(policy=p) for p in POLICIES}
 
 tuned = {}
-for fam, tune_fn in [("hemem", tuning.tune_hemem),
-                     ("memtis", tuning.tune_memtis),
-                     ("tpp", tuning.tune_tpp)]:
+for fam in ("hemem", "memtis", "tpp"):
     print(f"tuning {fam} on {wl} (24-config lane-batched sweep) ...")
-    _best_cfg, tuned[fam], _rows = tune_fn(trace, PMEM_LARGE, k, budget=24,
-                                           search_seed=0, sim_seed=0)
+    out = tuning.tune(fam, None, "pmem-large", k, budget=24,
+                      search_seed=0, sim_seed=0, workloads=[spec], T=T, n=n)
+    _best_cfg, tuned[fam], _rows = next(iter(out.values()))
 
 base = results["all-slow"].exec_time_s
 print(f"\nworkload={wl}  (speedup over all-data-in-slow-tier; Fig. 1/7)")
-for name, res in results.items():
-    print(f"  {name:12s} {base / res.exec_time_s:5.2f}x   "
-          f"promotions={res.promotions:5d} wasteful={res.wasteful:4d}")
-for fam, res in tuned.items():
-    print(f"  {'tuned-' + fam:12s} {base / res.exec_time_s:5.2f}x")
+for name, r in results.items():
+    print(f"  {name:12s} {base / r.exec_time_s:5.2f}x   "
+          f"promotions={r.promotions:5d} wasteful={r.wasteful:4d}")
+for fam, r in tuned.items():
+    print(f"  {'tuned-' + fam:12s} {base / r.exec_time_s:5.2f}x")
 a = results["arms"].exec_time_s
 print(f"\nARMS vs default HeMem: "
       f"{results['hemem'].exec_time_s / a:.2f}x; "
@@ -63,16 +60,31 @@ print(f"\nARMS vs default HeMem: "
       f"{tuned['memtis'].exec_time_s / a:.3f}; vs tuned-TPP: "
       f"{tuned['tpp'].exec_time_s / a:.3f}")
 
+# --- machine axis: robustness across hardware, no re-tuning --------------
+# Two-tier PMem and NUMA presets plus the three-tier DRAM/CXL/PMem chain,
+# all lanes of one dispatch per family (tier depths neutrally padded).
+MACHS = ["pmem-large", "numa", "dram-cxl-pmem"]
+mres = experiment.sweep(["hemem", "arms"], workloads=[spec],
+                        machines=MACHS, k=k, T=T, n=n)
+print(f"\nARMS vs HeMem across machines ({wl}; P x M axis product, "
+      f"one dispatch per family):")
+for m in MACHS:
+    h = mres.at(policy="hemem", machine=m).exec_time_s
+    ar = mres.at(policy="arms", machine=m).exec_time_s
+    print(f"  {m:14s} arms_vs_hemem={h / ar:5.2f}x  (arms {ar:7.3f}s)")
+
 # --- composed scenario: a phase shift DECLARED with a combinator ---------
 # First half gups (relocating hot set), second half silo-tpcc ("latest"
-# sliding window) — the paper's adaptivity story in one spec.  Runs
-# device-synthesized in the scan engine: no [T, n] trace is built.
+# sliding window) — the paper's adaptivity story in one spec, swept
+# against both a two- and a three-tier machine in one call.
 combo = workload_spec.phases(
     [workloads.spec("gups", T=T), workloads.spec("silo-tpcc", T=T)], [T // 2])
+cres = experiment.sweep(["hemem", "arms"], workloads=[combo],
+                        machines=["pmem-large", "dram-cxl-pmem"],
+                        k=k, T=T, n=n)
 print(f"\ncomposed scenario {workload_spec.label_of(combo)} "
       f"(device-synthesized, no [T, n] trace):")
-for name, pspec in [("hemem", HeMemSpec.make()), ("arms", ARMSSpec.make())]:
-    res = scan_engine.simulate_workload(pspec, combo, PMEM_LARGE, k, T, n)
-    print(f"  {name:6s} exec={res.exec_time_s:7.3f}s "
-          f"promotions={res.promotions:5d} wasteful={res.wasteful:4d} "
-          f"recall={res.hot_recall:.3f}")
+for coords, r in cres.items():
+    print(f"  {coords['policy']:6s} on {coords['machine']:14s} "
+          f"exec={r.exec_time_s:7.3f}s promotions={r.promotions:5d} "
+          f"wasteful={r.wasteful:4d} recall={r.hot_recall:.3f}")

@@ -29,7 +29,6 @@ from repro.core.controller import (MODE_SAMPLING_PERIODS,
                                    policy_every, sampling_period)
 from repro.core.scheduler import observe_migration_cost
 from repro.core.state import MODE_HISTORY, MODE_RECENCY, TieringState
-from repro.simulator import machine as machine_mod
 from repro.utils.pytree import pytree_dataclass
 
 # ARMSConfig float knobs that may be batched (traced) in a config sweep.
@@ -97,12 +96,19 @@ class ARMSSpec(PolicySpec):
     pad_demote = pad_promote
 
     def init(self, n_pages, k, machine):
+        # machine is a TieredMachineSpec (a host name/MachineSpec resolves
+        # here for direct callers); the path sums (full bottom-to-top hop
+        # chain) are the N-tier generalization of the legacy per-page
+        # promo/demo latencies and equal them bitwise at N=2 (the pair
+        # costs are host-precomputed f64 -> f32 leaves, machine_spec.py).
+        from repro.simulator import machines
+        machine = machines.get(machine)
         return ARMSRunState(
             inner=init_state(n_pages, self.cfg()),
             buf=jnp.zeros((n_pages,), jnp.float32),
             t=jnp.zeros((), jnp.int32),
-            promo_us=jnp.float32(machine_mod.promo_page_us(machine)),
-            demo_us=jnp.float32(machine_mod.demo_page_us(machine)))
+            promo_us=jnp.asarray(machine.promo_path_us(), jnp.float32),
+            demo_us=jnp.asarray(machine.demo_path_us(), jnp.float32))
 
     def observe(self, state, observed):
         return state.replace(buf=state.buf + observed, t=state.t + 1)
@@ -155,14 +161,20 @@ class ARMSPolicy(Policy):
         return self.base_cfg.bs_max
 
     def reset(self, n_pages, k, machine):
+        from repro.simulator import machines
+        machine = machines.get(machine)
         self.n, self.k = n_pages, k
         self.cfg = self.base_cfg
         self.state = init_state(n_pages, self.cfg)
         self.buf = np.zeros(n_pages)
         self.t = 0
         self._machine = machine
-        self._promo_us = machine_mod.promo_page_us(machine)
-        self._demo_us = machine_mod.demo_page_us(machine)
+        # f32 path sums, matching ARMSSpec.init (and the legacy f64->f32
+        # per-page costs bitwise at N=2).
+        self._promo_us = float(
+            np.sum(np.asarray(machine.promo_pair_us, np.float32)))
+        self._demo_us = float(
+            np.sum(np.asarray(machine.demo_pair_us, np.float32)))
         self._set_mode(MODE_HISTORY)
 
     def _set_mode(self, mode: int):

@@ -52,7 +52,7 @@ def policy_every(mode):
 
 
 def arms_step_impl(state: TieringState, access_counts, slow_bw_frac,
-                   app_bw_frac, *, cfg: ARMSConfig, k: int):
+                   app_bw_frac, *, cfg: ARMSConfig, k: int, tier_util=None):
     """One ARMS policy interval (untraced body — see ``arms_step``).
 
     This un-jitted entry point exists for callers that inline the controller
@@ -70,6 +70,10 @@ def arms_step_impl(state: TieringState, access_counts, slow_bw_frac,
         throttle input; §4.4).
       cfg: ARMSConfig (static).
       k: fast-tier capacity in pages (static).
+      tier_util: optional f32 [R] per-tier bandwidth utilization (N-tier
+        machines); throttles the migration batch by the top adjacent
+        pair's budget (scheduler.pair_budgets).  None = classic two-tier
+        BS formula.
 
     Returns:
       (new_state, MigrationPlan)
@@ -112,7 +116,7 @@ def arms_step_impl(state: TieringState, access_counts, slow_bw_frac,
 
     # 5. bandwidth-aware batch + priority order; apply residency update.
     plan = scheduler.build_plan(cand_idx, ok, demote_idx, app_bw_frac, 1.0,
-                                cfg)
+                                cfg, tier_util=tier_util)
     state = scheduler.apply_plan(state, plan)
     return state, plan
 

@@ -17,18 +17,47 @@ from repro.core.state import ARMSConfig, MigrationPlan, TieringState
 
 
 def batch_size(bw_app, bw_max, bs_max: int):
-    """The paper's BS formula; clamped to [1, bs_max]."""
+    """The paper's BS formula; clamped to [1, bs_max].
+
+    This is the CONSUMER-side clamp of the (raw, possibly > 1)
+    utilization signal: the interval cost model reports oversaturation
+    unclamped (simjax.tier_interval_outcome), and the clip here keeps the
+    BS formula well-defined for any input.
+    """
     frac = jnp.clip((bw_max - bw_app) / bw_max, 0.0, 1.0)
     bs = jnp.floor(frac * bs_max).astype(jnp.int32)
     return jnp.clip(bs, 1, bs_max)
 
 
+def pair_budgets(tier_util, bs_max: int):
+    """Per-adjacent-pair migration budgets over an N-tier chain.
+
+    ``tier_util`` [..., R]: per-tier bandwidth utilization (raw ratios
+    welcome — clipped here, the consumer).  A pair's budget runs the BS
+    formula against its more-saturated endpoint, so migration traffic
+    backs off from whichever tier of the hop is the bottleneck.
+    Returns i32 [..., R-1] budgets in [1, bs_max].
+    """
+    u = jnp.maximum(tier_util[..., :-1], tier_util[..., 1:])
+    frac = jnp.clip(1.0 - u, 0.0, 1.0)
+    return jnp.clip(jnp.floor(frac * bs_max).astype(jnp.int32), 1, bs_max)
+
+
 def build_plan(cand_idx, promote_ok, demote_idx, bw_app, bw_max,
-               cfg: ARMSConfig) -> MigrationPlan:
-    """Truncate the gated, priority-ordered candidate batch to BS entries."""
+               cfg: ARMSConfig, tier_util=None) -> MigrationPlan:
+    """Truncate the gated, priority-ordered candidate batch to BS entries.
+
+    ``tier_util`` (optional f32 [R]): per-tier utilization for N-tier
+    machines.  Promotions all cross the top adjacent pair, so the plan is
+    additionally throttled by that pair's budget; ``None`` keeps the
+    classic two-tier BS formula exactly.
+    """
+    width = min(cfg.bs_max, cand_idx.shape[0])
     bs = batch_size(jnp.asarray(bw_app, jnp.float32),
-                    jnp.asarray(bw_max, jnp.float32),
-                    min(cfg.bs_max, cand_idx.shape[0]))
+                    jnp.asarray(bw_max, jnp.float32), width)
+    if tier_util is not None:
+        bs = jnp.minimum(
+            bs, pair_budgets(jnp.asarray(tier_util, jnp.float32), width)[0])
     # Rank accepted candidates by arrival (= hotness) order.
     rank = jnp.cumsum(promote_ok.astype(jnp.int32)) - 1
     valid = promote_ok & (rank < bs)

@@ -15,6 +15,14 @@ objects (today: ``protocol.LegacyPolicyAdapter`` around a functional
 compiled scan engine (scan_engine.py) replays the same specs with
 fixed-shape sentinel-padded migrations; under a shared CRN field
 (``sample_u``) the two agree exactly, for every policy.
+
+Placement is an i32 per-page TIER INDEX over an N-tier chain
+(simulator/machine_spec.py): ``machine`` may be a registry name, a legacy
+two-tier ``MachineSpec``, or a ``TieredMachineSpec``; promotions move
+pages to tier 0 (capped by its capacity), demotions cascade down to the
+first tier with room, and each adjacent pair crossed charges its
+endpoints' bandwidth.  At N=2 this replays bitwise like the historical
+boolean ``in_fast`` engine.
 """
 from __future__ import annotations
 
@@ -23,7 +31,6 @@ import dataclasses
 import numpy as np
 
 from repro.baselines.base import Policy
-from repro.simulator.machine import MachineSpec, interval_time
 from repro.simulator.sampling import pebs_sample
 
 WASTE_WINDOW = 20  # intervals; promote->demote (or inverse) within = wasteful
@@ -91,9 +98,51 @@ def oracle_topk_masks(trace: np.ndarray, k: int) -> np.ndarray:
     return greater | (eq & (np.cumsum(eq, axis=1, dtype=np.int32) <= need))
 
 
-def run(policy: Policy, trace: np.ndarray, machine: MachineSpec, k: int,
+def apply_tier_migrations_np(tier, promote, demote, caps):
+    """Numpy mirror of ``simjax.apply_tier_migrations`` (variable-length
+    index lists instead of padded arrays; mutates ``tier`` in place).
+
+    Returns (promote_exec, demote_exec, mig_up, mig_down): the executed
+    page-index arrays (priority order preserved) and the i64 [R-1]
+    adjacent-pair crossing counts.
+    """
+    R = len(caps)
+    demote = np.asarray(demote, np.int64)
+    promote = np.asarray(promote, np.int64)
+
+    src = tier[demote]
+    keep = src < R - 1
+    demote, src = demote[keep], src[keep]
+    dest = np.full(len(demote), R - 1, np.int64)
+    occ = np.bincount(tier, minlength=R).astype(np.int64)
+    occ -= np.bincount(src, minlength=R)          # departures free slots
+    landed = np.zeros(len(demote), bool)
+    for r in range(1, R - 1):
+        cand = np.flatnonzero(~landed & (src < r))
+        take = cand[:max(int(caps[r] - occ[r]), 0)]
+        dest[take] = r
+        landed[take] = True
+        occ[r] += len(take)
+    tier[demote] = dest
+    mig_down = np.array([((src <= j) & (dest > j)).sum()
+                         for j in range(R - 1)], np.int64)
+
+    p_src = tier[promote]
+    keep = p_src > 0
+    promote, p_src = promote[keep], p_src[keep]
+    room = max(int(caps[0]) - int((tier == 0).sum()), 0)
+    promote, p_src = promote[:room], p_src[:room]
+    tier[promote] = 0
+    mig_up = np.array([(p_src > j).sum() for j in range(R - 1)], np.int64)
+    return promote, demote, mig_up, mig_down
+
+
+def run(policy: Policy, trace: np.ndarray, machine, k: int,
         seed: int = 0, sample_u: np.ndarray | None = None) -> SimResult:
     """Replay ``trace`` under ``policy`` (numpy reference engine).
+
+    ``machine``: registry name, two-tier ``MachineSpec``, or
+    ``TieredMachineSpec`` (resolved via ``machines.get``).
 
     ``sample_u``: optional [T, n] uniform field switching PEBS sampling (and
     the cost model) to the common-random-number path shared with the
@@ -101,18 +150,31 @@ def run(policy: Policy, trace: np.ndarray, machine: MachineSpec, k: int,
     interval arithmetic, which is what makes exact cross-engine equivalence
     testable.  Default (None) keeps the original numpy Poisson sampling.
     """
+    from repro.simulator import machine_spec, machines
+
+    machine = machines.get(machine)
+    R = machine.n_tiers
     T, n = trace.shape
     assert 0 < k <= n
+    caps = machine_spec.resolved_caps(machine, n, k)
     rng = np.random.default_rng(seed)
     policy.reset(n, k, machine)
     oracle_mask = oracle_topk_masks(trace, k)
     if sample_u is not None:
+        import jax
+        import jax.numpy as jnp
+
         from repro.simulator import simjax
         assert sample_u.shape == (T, n)
-        mp = simjax.machine_params(machine)
         crn_sample = _crn_sampler()
+        # one explicit f32/device conversion of the machine leaves before
+        # the loop (not T implicit downcasts inside it) — also what keeps
+        # the cost arithmetic f32, and therefore bitwise-equal to the scan
+        # engine's, even under jax_enable_x64.
+        mach_dev = jax.tree_util.tree_map(
+            lambda v: jnp.asarray(v, jnp.float32), machine)
 
-    in_fast = np.zeros(n, bool)
+    tier = np.full(n, R - 1, np.int32)    # everything starts at the bottom
     promoted_at = np.full(n, -(10 ** 9))
     demoted_at = np.full(n, -(10 ** 9))
 
@@ -140,15 +202,9 @@ def run(policy: Policy, trace: np.ndarray, machine: MachineSpec, k: int,
 
         promote, demote = policy.step(observed, slow_bw_frac, app_bw_frac)
 
-        # --- engine-side validation & capacity enforcement ---
-        demote = np.asarray(demote, np.int64)
-        promote = np.asarray(promote, np.int64)
-        demote = demote[in_fast[demote]]
-        in_fast[demote] = False
-        promote = promote[~in_fast[promote]]
-        room = k - int(in_fast.sum())
-        promote = promote[:room]
-        in_fast[promote] = True
+        # --- engine-side validation, capacity + hop-chain execution ---
+        promote, demote, mig_up, mig_down = apply_tier_migrations_np(
+            tier, promote, demote, caps)
 
         # --- wasteful-migration accounting ---
         wasteful += int((t - demoted_at[promote] <= WASTE_WINDOW).sum())
@@ -162,34 +218,41 @@ def run(policy: Policy, trace: np.ndarray, machine: MachineSpec, k: int,
         # --- cost model ---
         if sample_u is not None:
             # CRN mode: identical f32 arithmetic to the scan engine.
-            acc_fast, acc_slow, wall, slow_share, app_frac = (
+            acc_fast, acc_slow, wall, slow_share, app_raw = (
                 float(v) for v in simjax.interval_accounting(
-                    mp, true.astype(np.float32), in_fast,
-                    float(len(promote)), float(len(demote))))
+                    mach_dev, true.astype(np.float32), jnp.asarray(tier),
+                    mig_up.astype(np.float32), mig_down.astype(np.float32)))
         else:
+            in_fast = tier == 0
             acc_fast = float(true[in_fast].sum())
-            acc_slow = float(true.sum()) - acc_fast
-            out = interval_time(machine, acc_fast, acc_slow,
-                                len(promote), len(demote))
-            wall = out.wall_s
-            slow_share = acc_slow / max(acc_fast + acc_slow, 1e-9)
-            app_frac = out.app_bw_frac
+            accs = [acc_fast]
+            rest = float(true.sum()) - acc_fast
+            for r in range(1, R - 1):
+                a = float(true[tier == r].sum())
+                accs.append(a)
+                rest -= a
+            accs.append(rest)
+            acc_slow = sum(accs[1:])
+            wall, slow_share, app_raw, _ = machine_spec.interval_outcome_host(
+                machine, accs, mig_up, mig_down)
         # policy-mechanism overhead charged to the application (e.g. TPP's
         # NUMA hint faults are taken on slow-tier accesses).
         extra_ns = getattr(policy, "slow_access_extra_ns", 0.0)
         if extra_ns:
-            wall += acc_slow * extra_ns * 1e-9 / machine.mlp
+            wall += acc_slow * extra_ns * 1e-9 / float(machine.mlp)
         exec_time += wall
         # The paper's PHT input is slow-tier bandwidth; when the slow tier
         # saturates, utilization pegs at 1 and carries no signal, so we feed
         # the underlying quantity PHT is meant to detect (§4.2: "more memory
         # references go to the slow tier"): the slow-access share.
         slow_bw_frac = slow_share
-        app_bw_frac = app_frac
+        # consumer-side clamp of the RAW utilization ratio: the policy
+        # signal stays in [0,1] (bitwise the old at-source clamp).
+        app_bw_frac = min(1.0, app_raw)
 
         acc_fast_total += acc_fast
         acc_total += acc_fast + acc_slow
-        recall_sum += float(in_fast[oracle_mask[t]].sum()) / k
+        recall_sum += float((tier == 0)[oracle_mask[t]].sum()) / k
         tl_slow[t] = slow_bw_frac
         tl_hits[t] = acc_fast / max(acc_fast + acc_slow, 1e-9)
         tl_mode[t] = getattr(policy, "mode", 0)

@@ -1,0 +1,263 @@
+"""Axis-product experiment API: policies × workloads × machines × seeds.
+
+The spec trilogy — policies (baselines/protocol.py), workloads
+(simulator/workload_spec.py) and machines (simulator/machine_spec.py) —
+makes every experiment axis a batchable pytree, so the full paper
+question ("which policy is robust across workloads AND machines without
+tuning?") flattens into lanes of ONE compiled scan-engine dispatch:
+
+    res = experiment.sweep(
+        policies=["arms", HeMemSpec.make(hot_threshold=4)],
+        workloads=["gups", "silo-tpcc"],       # synth mode (needs T, n)
+        machines=["pmem-large", "dram-cxl-pmem"],
+        seeds=[0], k=256, T=300, n=2048)
+    res.at(policy="arms", workload="gups", machine="dram-cxl-pmem")
+
+Lane layout per dispatch: ``((w*P + p)*M + m)*S + s`` — workloads
+outermost (each workload's device-synthesized state feeds its P*M*S
+policy/machine/seed lanes), machines of different tier depth unified by
+neutral padding (machine_spec.pad_tiers), seeds innermost.  Policies of
+*different families* (different state pytrees) cannot share a lane axis;
+they are grouped by family, one dispatch per family, each still covering
+the full W×M×S product — a single-family sweep (e.g. a tuning grid
+across machines) is exactly one dispatch, which the CI machine-sweep
+gate asserts.
+
+Noise pairing: with a single seed, lanes share common random numbers
+(trace mode: one uniform field from ``sim_seed``; synth mode: the
+counter-based ``crn_prng`` rows) so policy/workload/machine comparisons
+are paired.  With multiple seeds the sampling switches to per-lane
+``prng`` keys — each seed lane draws its own noise.
+
+``tuning.tune``, ``benchmarks/paper_tables.py`` and
+``examples/simulate_tiering.py`` route their sweeps through here.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.arms_policy import ARMSSpec
+from repro.baselines.hemem import HeMemSpec
+from repro.baselines.memtis import MemtisSpec
+from repro.baselines.static import AllSlowSpec, OracleSpec
+from repro.baselines.tpp import TPPSpec
+from repro.simulator import machine_spec, scan_engine, workload_spec
+from repro.simulator import machines as machines_mod
+from repro.simulator.engine import SimResult, oracle_topk_masks
+from repro.simulator.sampling import uniform_field
+
+__all__ = ["sweep", "SweepResult", "policy_spec", "POLICY_REGISTRY"]
+
+POLICY_REGISTRY = {
+    "arms": lambda: ARMSSpec.make(),
+    "hemem": lambda: HeMemSpec.make(),
+    "memtis": lambda: MemtisSpec.make(),
+    "tpp": lambda: TPPSpec.make(),
+    "all-slow": AllSlowSpec,
+    "oracle": OracleSpec,
+}
+
+AXES = ("policy", "workload", "machine", "seed")
+
+
+def policy_spec(p):
+    """Resolve a policy name to its default-knob spec; specs pass through."""
+    if isinstance(p, str):
+        if p not in POLICY_REGISTRY:
+            raise ValueError(f"unknown policy {p!r}; "
+                             f"known: {sorted(POLICY_REGISTRY)}")
+        return POLICY_REGISTRY[p]()
+    return p
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Structured P×W×M×S result grid.
+
+    ``axes`` maps axis name -> labels (in order policy, workload, machine,
+    seed); ``grid`` is the flat SimResult list in C order over those axes.
+    """
+
+    axes: dict
+    grid: list
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(len(self.axes[a]) for a in AXES)
+
+    def _index(self, axis: str, key) -> int:
+        if isinstance(key, str):
+            labels = [lb.lower() for lb in self.axes[axis]]
+            try:
+                return labels.index(key.lower())
+            except ValueError:
+                raise KeyError(
+                    f"{key!r} not on {axis} axis {self.axes[axis]}")
+        key = int(key)
+        # flat C-order indexing would silently alias a negative or
+        # out-of-range index into a neighbouring axis block.
+        if not 0 <= key < len(self.axes[axis]):
+            raise IndexError(f"{axis} index {key} out of range "
+                             f"[0, {len(self.axes[axis])})")
+        return key
+
+    def at(self, policy=0, workload=0, machine=0, seed=0) -> SimResult:
+        """One cell, addressed by axis label or integer index."""
+        p, w, m, s = (self._index(a, v) for a, v in
+                      zip(AXES, (policy, workload, machine, seed)))
+        P, W, M, S = self.shape
+        return self.grid[((p * W + w) * M + m) * S + s]
+
+    def items(self):
+        """Yield (coords dict, SimResult) over the full grid."""
+        P, W, M, S = self.shape
+        for i, res in enumerate(self.grid):
+            s = i % S
+            m = (i // S) % M
+            w = (i // (S * M)) % W
+            p = i // (S * M * W)
+            yield {a: self.axes[a][j]
+                   for a, j in zip(AXES, (p, w, m, s))}, res
+
+
+def _resolve_workloads(workloads, T):
+    specs, names = [], []
+    for i, w in enumerate(workloads):
+        if isinstance(w, str):
+            specs.append(workload_spec.named(w, T=T))
+            names.append(w)
+        else:
+            specs.append(w)
+            names.append(workload_spec.label_of(w, f"wl{i}"))
+    return specs, names
+
+
+def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
+          seeds=(0,), k: int, T: int | None = None, n: int | None = None,
+          sim_seed: int = 0, wl_seed: int = 0, sample_u=None) -> SweepResult:
+    """Axis-product sweep; ONE lane-batched dispatch per policy family.
+
+    ``policies``: policy names and/or PolicySpec instances (a tuning grid
+    is a list of same-family specs).  ``workloads``: workload names /
+    WorkloadSpecs (device-synthesis mode; requires ``T``/``n``) — or pass
+    a materialized ``trace`` instead (trace-replay mode, workload axis
+    collapses to the single trace).  ``machines``: registry names /
+    MachineSpecs / TieredMachineSpecs; tier depths may differ (neutral
+    padding unifies them in one dispatch).  ``seeds``: one entry keeps
+    all lanes CRN-paired (noise from ``sim_seed``); several entries give
+    each seed lane its own PRNG noise stream.
+    """
+    policies = [policies] if not isinstance(policies, (list, tuple)) \
+        else list(policies)
+    pol_specs = [policy_spec(p) for p in policies]
+    machines_in = [machines] if not isinstance(machines, (list, tuple)) \
+        else list(machines)
+    mach_specs = [machines_mod.get(m) for m in machines_in]
+    seeds = list(seeds)
+    P, M, S = len(pol_specs), len(mach_specs), len(seeds)
+    if not (P and M and S):
+        raise ValueError("every axis needs at least one entry")
+
+    synth = workloads is not None
+    if synth:
+        if trace is not None:
+            raise ValueError("pass either trace or workloads, not both")
+        if T is None or n is None:
+            raise ValueError("workload-synthesis mode needs T and n")
+        if not list(workloads):
+            raise ValueError("every axis needs at least one entry")
+        wl_specs, wl_names = _resolve_workloads(list(workloads), T)
+        W = len(wl_specs)
+        wl = scan_engine._stack_workloads(wl_specs)
+        wl_boost = any(w.has_boost() for w in wl_specs)
+    else:
+        if trace is None:
+            raise ValueError("need a trace or a workloads list")
+        trace = np.asarray(trace)
+        T, n = trace.shape
+        W, wl_names = 1, ["trace"]
+        oracle = oracle_topk_masks(trace, k)
+    assert 0 < k <= n
+
+    if sample_u is not None:
+        if S > 1:
+            # "crn" never consumes the per-lane keys: the seed lanes would
+            # be silent bitwise copies of each other.
+            raise ValueError("sample_u fixes the noise for every lane; "
+                             "it cannot be combined with a seeds axis")
+        sampling = "crn"
+        sample = jnp.asarray(sample_u, jnp.float32)
+        assert sample.shape == (T, n)
+    elif S == 1:
+        # paired comparisons: every lane shares one CRN noise source.
+        sampling = "crn" if not synth else "crn_prng"
+        sample = (jnp.asarray(uniform_field(T, n, seed=sim_seed))
+                  if not synth else jnp.zeros((T, 1), jnp.float32))
+    else:
+        sampling = "prng"
+        sample = jnp.zeros((T, 1), jnp.float32)
+
+    # group same-family policies: different state pytrees cannot stack.
+    groups: dict = {}
+    for i, sp in enumerate(pol_specs):
+        groups.setdefault(type(sp), []).append(i)
+
+    mach_all, caps_all = machine_spec.lane_stack(mach_specs, n, k)
+    grid = [None] * (P * W * M * S)
+    for cls, idxs in groups.items():
+        Pg = len(idxs)
+        L = W * Pg * M * S
+        lane = np.arange(L)
+        p_local = (lane // (M * S)) % Pg
+        m_of = (lane // S) % M
+        s_of = lane % S
+        spec_l = scan_engine._take_lanes(
+            scan_engine._stack_specs([pol_specs[i] for i in idxs]),
+            jnp.asarray(p_local, jnp.int32))
+        mach_l = scan_engine._take_lanes(mach_all,
+                                         jnp.asarray(m_of, jnp.int32))
+        caps_l = jnp.take(caps_all, jnp.asarray(m_of, jnp.int32), axis=0)
+        keys = jnp.stack([jax.random.PRNGKey(int(seeds[s])) for s in s_of])
+        min_period = min(pol_specs[i].min_sampling_period() for i in idxs)
+        if synth:
+            out = scan_engine._sim_synth_jit(
+                spec_l, wl, k, mach_l, caps_l, keys, sample,
+                jax.random.PRNGKey(sim_seed),
+                jnp.stack([jax.random.PRNGKey(wl_seed)] * W),
+                sampling,
+                scan_engine._synth_need_normal(wl_specs, min_period),
+                Pg * M * S, n, wl_boost=wl_boost)
+        else:
+            out = scan_engine._sim_jit(
+                spec_l, jnp.asarray(trace, jnp.float32),
+                jnp.asarray(oracle), k, mach_l, caps_l, keys, sample,
+                sampling, scan_engine._need_normal(trace, min_period))
+        out = scan_engine._timelines_lane_major(out)
+        scan_engine._record_dispatch(
+            lanes=L, sampling=sampling, policy=pol_specs[idxs[0]].name,
+            synth=synth, workloads=W, configs=Pg, machines=M, seeds=S,
+            axis_product=True)
+        for l in range(L):
+            w = l // (Pg * M * S)
+            p = idxs[p_local[l]]
+            m, s = m_of[l], s_of[l]
+            name = f"{pol_specs[p].name}@{wl_names[w]}[{mach_specs[m].name}]"
+            if S > 1:
+                name += f"[seed={seeds[s]}]"
+            grid[((p * W + w) * M + m) * S + s] = scan_engine._to_result(
+                out, l, name)
+
+    def dedup(labels):
+        dup = {nm for nm in labels if labels.count(nm) > 1}
+        return [f"{nm}#{i}" if nm in dup else nm
+                for i, nm in enumerate(labels)]
+
+    axes = dict(policy=dedup([sp.name for sp in pol_specs]),
+                workload=dedup(wl_names),
+                machine=dedup([m.name for m in mach_specs]),
+                seed=[str(s) for s in seeds])
+    return SweepResult(axes=axes, grid=grid)

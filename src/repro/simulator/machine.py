@@ -12,6 +12,12 @@ i.e. the workload is limited by whichever resource saturates first; migration
 traffic shares tier bandwidth with the application (this is exactly the
 interference ARMS's BS formula manages).  MLP models the memory-level
 parallelism of the threaded workload.
+
+Both engines now run on the N-tier generalization of this model
+(simulator/machine_spec.py, an i32 per-page tier index + adjacent-pair
+hop migrations); the two-tier dataclass here remains the host-facing
+Table-3 description and converts via ``machines.get`` /
+``machine_spec.from_machine`` (N=2 replays are bitwise-identical).
 """
 from __future__ import annotations
 
@@ -52,9 +58,16 @@ MACHINES = {"pmem-large": PMEM_LARGE, "numa": NUMA}
 
 @dataclasses.dataclass(frozen=True)
 class IntervalOutcome:
+    """Raw (UNCLAMPED) utilization ratios: a tier demanding more
+    bandwidth-time than the rest of the interval provides reports > 1 —
+    the oversaturation magnitude the controller's cost/benefit signal
+    needs.  Clamping happens only at the signal consumer (the engines
+    clamp the policy-facing signal; core/scheduler.batch_size clips its
+    input); ``min(1, raw)`` reproduces the old at-source clamp bitwise."""
+
     wall_s: float
-    slow_bw_frac: float   # slow-tier utilization in [0,1]
-    app_bw_frac: float    # fast-tier (system) bandwidth utilization in [0,1]
+    slow_bw_frac: float   # slow-tier bandwidth-time / rest of interval
+    app_bw_frac: float    # fast-tier bandwidth-time / rest of interval
 
 
 def interval_time(m: MachineSpec, acc_fast: float, acc_slow: float,
@@ -73,8 +86,8 @@ def interval_time(m: MachineSpec, acc_fast: float, acc_slow: float,
                  + mig_slow_write / m.bw_slow_write)
     wall = max(t_lat, t_bw_fast, t_bw_slow, 1e-12)
 
-    slow_frac = min(1.0, t_bw_slow / wall)
-    app_frac = min(1.0, t_bw_fast / wall)
+    slow_frac = t_bw_slow / max(t_lat, t_bw_fast, 1e-12)
+    app_frac = t_bw_fast / max(t_lat, t_bw_slow, 1e-12)
     return IntervalOutcome(wall_s=wall, slow_bw_frac=slow_frac,
                            app_bw_frac=app_frac)
 

@@ -1,0 +1,248 @@
+"""Declarative N-tier machine protocol: batchable ``TieredMachineSpec``.
+
+Machines were the last stateful-host API in the simulator: a frozen
+two-tier ``MachineSpec`` dataclass (machine.py) baked into static jit
+arguments, so hardware-sensitivity studies re-ran sequentially and
+multi-tier topologies (DRAM/CXL/PMEM chains) could not be expressed at
+all.  Here a machine is a pytree whose *leaves* are per-tier arrays —
+
+    lat_ns[R], bw_read[R], bw_write[R], capacity_pages[R], mlp
+
+over an arbitrary tier chain (tier 0 fastest, R-1 the unbounded bottom)
+— batchable into sweep lanes exactly like policy and workload knobs, so
+a P×W×M×S axis-product sweep is ONE compiled dispatch
+(simulator/experiment.py).
+
+Cost-model semantics (generalizing machine.interval_time):
+
+  * page placement is an i32 per-page **tier index** (0 = fastest); the
+    boolean ``in_fast`` of the two-tier model is ``tier == 0``;
+  * migrations execute as chains of **adjacent-tier-pair hops**: a
+    promotion moves a page from its tier to tier 0 crossing every pair
+    on the way (read the pair's lower tier, write its upper tier); a
+    demotion cascades down from its tier to the first tier with free
+    capacity (the bottom always has room).  Each pair crossed charges
+    its endpoints' bandwidth — per-tier bandwidth saturation;
+  * tier 0 charges all its traffic (app reads + migration reads and
+    writes) against one symmetric bandwidth, exactly the legacy
+    fast-tier expression; every lower tier charges reads against
+    ``bw_read[r]`` and writes against ``bw_write[r]`` separately,
+    exactly the legacy slow-tier expression.  At N=2 the interval cost
+    is therefore **bitwise identical** to the pre-refactor two-tier
+    path in both engines — that equivalence is the refactor's safety
+    net (tests/test_machine_spec.py).
+
+Capacity encoding (``capacity_pages`` leaf, resolved per run by
+``resolved_caps(spec, n, k)``):
+
+    c == 0 : unbounded (resolved to n — a tier holding every page never
+             blocks);  c > 0 : absolute pages;  c < 0 : ``round(-c*k)``
+             pages, i.e. a multiple of the fast-tier capacity.
+    Tier 0 is always resolved to the run's ``k`` and the bottom tier to
+    ``n``, so the two-tier presets reproduce today's (k, unbounded)
+    semantics exactly.
+
+Per-pair migration costs (``promo_pair_us``/``demo_pair_us``, f32
+[R-1]) are precomputed **in float64 on the host** at construction and
+stored as f32 leaves: the values that cross a jit boundary are then
+bit-identical to the legacy ``jnp.float32(machine.promo_page_us(m))``
+path (an in-trace f32 division would drift in the last ulp and flip
+ARMS cost/benefit decisions).  Consumers read the **path sums**
+(``promo_path_us``) — the full bottom-to-top promotion cost — which are
+invariant under neutral tier padding.
+
+Neutral padding (``pad_tiers``): machines with different tier counts
+share one stacked dispatch by inserting zero-capacity, infinite-
+bandwidth, zero-latency tiers just above the bottom.  Such tiers take
+no pages (cap 0), add no latency or bandwidth time (x/inf == 0), and
+leave every real tier's traffic unchanged, so a padded two-tier machine
+replays bitwise like the unpadded one.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.simulator.machine import CACHELINE, PAGE_BYTES, MachineSpec
+from repro.utils.pytree import pytree_dataclass
+
+
+@pytree_dataclass(meta=("name",))
+class TieredMachineSpec:
+    """N-tier machine; every field but ``name`` is a batchable leaf.
+
+    Host-constructed specs carry f64 numpy leaves so the numpy engine's
+    non-CRN cost path (``interval_outcome_host``) computes with the exact
+    Table-3 constants, bit-identical to the pre-N-tier f64 engine; every
+    device path casts to f32 at the lane-stack / jit boundary (the same
+    f32 values the legacy ``machine_params`` cast produced)."""
+
+    lat_ns: jnp.ndarray          # [R] per-access latency (ns)
+    bw_read: jnp.ndarray         # [R] B/s (tier 0: symmetric bandwidth)
+    bw_write: jnp.ndarray        # [R]
+    capacity_pages: jnp.ndarray  # [R] encoded capacities (module doc)
+    mlp: jnp.ndarray             # scalar memory-level parallelism
+    promo_pair_us: jnp.ndarray   # [R-1] per-pair hop costs (f64-derived)
+    demo_pair_us: jnp.ndarray    # [R-1]
+    name: str = "machine"
+
+    @property
+    def n_tiers(self) -> int:
+        return int(self.lat_ns.shape[-1])
+
+    def promo_path_us(self):
+        """Full bottom-to-top promotion cost; pair-0 cost at N=2."""
+        return jnp.sum(self.promo_pair_us, axis=-1)
+
+    def demo_path_us(self):
+        return jnp.sum(self.demo_pair_us, axis=-1)
+
+
+def make(name: str, lat_ns, bw_read, bw_write, capacity_pages=None,
+         mlp: float = 64.0) -> TieredMachineSpec:
+    """Host constructor: f64 leaves (class docstring; device paths cast)."""
+    lat = np.asarray(lat_ns, np.float64)
+    br = np.asarray(bw_read, np.float64)
+    bw = np.asarray(bw_write, np.float64)
+    R = lat.shape[0]
+    if R < 2 or br.shape[0] != R or bw.shape[0] != R:
+        raise ValueError(f"need >=2 tiers with matching leaves, got "
+                         f"{lat.shape}/{br.shape}/{bw.shape}")
+    caps = (np.zeros(R) if capacity_pages is None
+            else np.asarray(capacity_pages, np.float64))
+    if caps.shape[0] != R:
+        raise ValueError("capacity_pages length must equal tier count")
+    # hop j+1 -> j reads the lower tier and writes the upper one; the
+    # term order matches machine.promo_page_us/demo_page_us exactly.
+    promo = (PAGE_BYTES / br[1:] + PAGE_BYTES / bw[:-1]) * 1e6
+    demo = (PAGE_BYTES / br[:-1] + PAGE_BYTES / bw[1:]) * 1e6
+    return TieredMachineSpec(
+        lat_ns=lat, bw_read=br, bw_write=bw,
+        capacity_pages=caps, mlp=np.float64(mlp),
+        promo_pair_us=promo, demo_pair_us=demo, name=name)
+
+
+def from_machine(m: MachineSpec) -> TieredMachineSpec:
+    """The legacy two-tier dataclass as a tier chain (cap encoding: tier 0
+    takes the run's k, the slow tier is unbounded — today's semantics)."""
+    return make(m.name, [m.lat_fast_ns, m.lat_slow_ns],
+                [m.bw_fast, m.bw_slow_read], [m.bw_fast, m.bw_slow_write],
+                mlp=m.mlp)
+
+
+def resolved_caps(spec: TieredMachineSpec, n: int, k: int) -> np.ndarray:
+    """Concrete per-tier capacities (i32 [R]) for a run of n pages, tier-0
+    capacity k.  Host-side: runs before lane stacking."""
+    caps = np.asarray(spec.capacity_pages, np.float64)
+    R = caps.shape[0]
+    out = np.empty(R, np.int64)
+    out[0] = k
+    out[R - 1] = n
+    for r in range(1, R - 1):
+        c = caps[r]
+        if c == 0:
+            out[r] = n
+        elif c < 0:
+            out[r] = int(round(-c * k))
+        else:
+            out[r] = int(round(c))
+    return np.clip(out, 0, n).astype(np.int32)
+
+
+def pad_tiers(spec: TieredMachineSpec, caps: np.ndarray, R_target: int):
+    """Insert neutral tiers (cap 0, bw inf, lat 0) above the bottom tier so
+    machines of different depth stack into one lane axis.  Semantically a
+    no-op: padded == unpadded bitwise (module docstring).  Pair-cost leaves
+    are zero-extended — consumers read path sums, which x+0 preserves."""
+    R = spec.n_tiers
+    if R == R_target:
+        return spec, caps
+    if R > R_target:
+        raise ValueError(f"cannot shrink {R} tiers to {R_target}")
+    pad = R_target - R
+    f32 = np.float32
+    ins = lambda arr, val: np.concatenate(
+        [np.asarray(arr, f32)[:-1], np.full(pad, val, f32),
+         np.asarray(arr, f32)[-1:]])
+    spec = dataclasses.replace(
+        spec,
+        lat_ns=ins(spec.lat_ns, 0.0),
+        bw_read=ins(spec.bw_read, np.inf),
+        bw_write=ins(spec.bw_write, np.inf),
+        capacity_pages=ins(spec.capacity_pages, 1e-9),
+        promo_pair_us=np.concatenate(
+            [np.asarray(spec.promo_pair_us, f32), np.zeros(pad, f32)]),
+        demo_pair_us=np.concatenate(
+            [np.asarray(spec.demo_pair_us, f32), np.zeros(pad, f32)]))
+    caps = np.concatenate(
+        [caps[:-1], np.zeros(pad, np.int32), caps[-1:]]).astype(np.int32)
+    return spec, caps
+
+
+def lane_stack(machs: list, n: int, k: int):
+    """Stack resolved machines into one lane axis.
+
+    -> (TieredMachineSpec with [M, ...] leaves, caps i32 [M, R]).  Tier
+    counts are unified by neutral padding.  Names are overwritten to a
+    common placeholder (meta must match to stack) — callers needing
+    per-lane labels keep their own input list (experiment.sweep does).
+    """
+    import jax
+
+    machs = list(machs)
+    R = max(m.n_tiers for m in machs)
+    specs, caps = [], []
+    for m in machs:
+        sp, cp = pad_tiers(m, resolved_caps(m, n, k), R)
+        specs.append(dataclasses.replace(sp, name="lanes"))
+        caps.append(cp)
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x, jnp.float32) for x in xs]),
+        *specs)
+    return stacked, jnp.asarray(np.stack(caps), jnp.int32)
+
+
+# ------------------------------------------------------- host cost model
+def interval_outcome_host(spec: TieredMachineSpec, acc, mig_up, mig_down):
+    """f64 reference interval cost for the numpy engine's non-CRN path.
+
+    ``acc`` [R] per-tier access counts, ``mig_up``/``mig_down`` [R-1]
+    pages crossing each adjacent pair upward/downward.  Returns
+    (wall_s, slow_share, app_bw_frac_raw, slow_bw_frac_raw) — the
+    *_raw ratios are unclamped (>1 == oversaturated; consumers clamp,
+    see core/scheduler.batch_size).
+    """
+    lat = np.asarray(spec.lat_ns, np.float64)
+    br = np.asarray(spec.bw_read, np.float64)
+    bw = np.asarray(spec.bw_write, np.float64)
+    R = lat.shape[0]
+    acc = np.asarray(acc, np.float64)
+    up = np.asarray(mig_up, np.float64)
+    down = np.asarray(mig_down, np.float64)
+
+    t_lat = acc[0] * lat[0]
+    for r in range(1, R):
+        t_lat = t_lat + acc[r] * lat[r]
+    t_lat = t_lat * 1e-9 / float(spec.mlp)
+
+    times = [(acc[0] * CACHELINE + (up[0] + down[0]) * PAGE_BYTES) / br[0]]
+    for r in range(1, R):
+        rd = up[r - 1]
+        if r < R - 1:
+            rd = rd + down[r]
+        wr = down[r - 1]
+        if r < R - 1:
+            wr = wr + up[r]
+        times.append((acc[r] * CACHELINE + rd * PAGE_BYTES) / br[r]
+                     + wr * PAGE_BYTES / bw[r])
+
+    wall = max(t_lat, *times, 1e-12)
+    rest = acc[1]
+    for r in range(2, R):
+        rest = rest + acc[r]
+    slow_share = rest / max(acc[0] + rest, 1e-9)
+    app_raw = times[0] / max(t_lat, *times[1:], 1e-12)
+    slow_raw = max(times[1:]) / max(t_lat, times[0], 1e-12)
+    return wall, slow_share, app_raw, slow_raw

@@ -16,21 +16,26 @@ On top of it:
     study: per-lane noise drawn from keys threaded through the carry);
   * ``sweep_policy_configs`` — batched over a policy family's knobs: one
     spec per lane, all lanes sharing one CRN noise field (paired
-    comparisons — config differences are never confounded with noise).
-    This is what makes Tuned-HeMem/Memtis/TPP one compiled dispatch each
-    (see tuning.py) instead of a sequential replay per config;
+    comparisons — config differences are never confounded with noise);
   * ``arms_sim`` / ``sweep_arms_configs`` — the ARMS-specialized wrappers
     (the latter precomputes both mode-dependent observation grids once and
     broadcasts them, so ARMS config lanes pay zero sampling cost);
   * ``simulate_workload`` / ``sweep_workloads`` / ``sweep_workload_configs``
-    — the trace-SYNTHESIS path: instead of consuming a materialized
-    ``[T, n]`` xs trace, the scan carries ``WorkloadSpec`` state
+    — the trace-SYNTHESIS path: the scan carries ``WorkloadSpec`` state
     (simulator/workload_spec.py) and synthesizes ``true = work * probs``
-    plus the oracle top-k mask on device each interval.  Per-lane storage
-    is O(n), nothing ``[T, n]`` exists on host or device, and workload
-    lanes batch exactly like config lanes (lane ``w * B + b`` scores
-    config b on workload w — ``tuning.tune(..., workloads=[...])`` is one
-    compiled dispatch of W*B lanes).
+    plus the oracle top-k mask on device each interval; per-lane storage
+    is O(n), nothing ``[T, n]`` exists on host or device.
+
+MACHINES are sweep lanes too: every entry point accepts a registry name
+(``machines.get``), a legacy two-tier ``MachineSpec``, or an N-tier
+``TieredMachineSpec`` (simulator/machine_spec.py), and the machine's
+f32 per-tier leaves ride the same lane axis as policy and workload
+knobs — ``experiment.sweep`` flattens a P×W×M×S axis product into ONE
+dispatch of this engine.  The scan carry holds an i32 per-page tier
+index; migrations are adjacent-pair hop chains
+(``simjax.apply_tier_migrations``) and the interval cost charges each
+tier's bandwidth separately.  N=2 replays are bitwise-identical to the
+historical boolean two-tier engine (tests/test_machine_spec.py).
 
 Batching layout: sweep lanes live in an explicit leading axis of the scan
 carry rather than under an outer ``vmap`` of the whole simulation.  This
@@ -46,6 +51,14 @@ Engine-side bookkeeping is shared with the numpy engine via
 (``sample_u``) the two engines agree bitwise on sampling and interval
 arithmetic, so promotions/demotions/wasteful counts match exactly for every
 policy (see tests/test_scan_engine.py).
+
+NOTE on the module boundary: ``simulator/experiment.py`` (the axis-product
+orchestrator) assembles lanes directly on this module's underscore helpers
+(``_sim_jit``/``_sim_synth_jit``, ``_stack_specs``/``_stack_workloads``/
+``_take_lanes``, ``_need_normal``/``_synth_need_normal``, ``_to_result``/
+``_timelines_lane_major``/``_record_dispatch``).  They are a load-bearing
+internal contract shared by exactly those two modules — change their
+signatures in lockstep.
 """
 from __future__ import annotations
 
@@ -57,7 +70,7 @@ import numpy as np
 
 from repro.baselines.arms_policy import SWEEPABLE, ARMSSpec
 from repro.core.state import ARMSConfig
-from repro.simulator import simjax, workload_spec
+from repro.simulator import machine_spec, machines, simjax, workload_spec
 from repro.simulator.engine import SimResult, oracle_topk_masks
 from repro.simulator.sampling import (_NORMAL_SWITCH, pebs_sample_from_uniform,
                                       synth_uniform_row, uniform_field)
@@ -69,8 +82,8 @@ __all__ = [
 ]
 
 #: Info about the most recent compiled dispatch (lanes, sampling mode).
-#: The CI quick gate reads this to assert tuning sweeps stay lane-batched
-#: instead of silently regressing to a sequential per-config loop.
+#: The CI quick gates read this to assert tuning and machine sweeps stay
+#: lane-batched instead of silently regressing to a sequential loop.
 last_dispatch: dict = {}
 
 
@@ -104,11 +117,23 @@ def _stack_specs(specs):
         lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *specs)
 
 
+def _take_lanes(pytree, idx):
+    """Gather lanes of a lane-batched pytree along axis 0."""
+    return jax.tree_util.tree_map(lambda x: jnp.take(x, idx, axis=0), pytree)
+
+
 def _stack_workloads(wl_specs):
     """Stack WorkloadSpecs into one [W]-lane spec (component-count padded)."""
     S = max(sp.n_components for sp in wl_specs)
     return _stack_specs([workload_spec.pad_components(sp, S)
                          for sp in wl_specs])
+
+
+def _mach_lanes(machine, B: int, n: int, k: int):
+    """One machine broadcast to B lanes -> (mach [B,...], caps i32 [B, R])."""
+    mach, caps = machine_spec.lane_stack([machines.get(machine)], n, k)
+    idx = jnp.zeros((B,), jnp.int32)
+    return _take_lanes(mach, idx), jnp.take(caps, idx, axis=0)
 
 
 def _topk_mask(x, k: int):
@@ -119,14 +144,15 @@ def _topk_mask(x, k: int):
     return jnp.zeros(x.shape, bool).at[idx].set(True)
 
 
-def _init_carry(spec, B: int, n: int, k: int, machine, keys):
+def _init_carry(spec, B: int, n: int, k: int, mach, keys):
     f32 = jnp.float32
     cls = type(spec)
-    state = jax.vmap(lambda sp: cls.init(sp, n, k, machine),
-                     axis_size=B)(spec)
+    R = mach.lat_ns.shape[-1]
+    state = jax.vmap(lambda sp, mc: cls.init(sp, n, k, mc),
+                     axis_size=B)(spec, mach)
     return dict(
         state=state,
-        in_fast=jnp.zeros((B, n), bool),
+        tier=jnp.full((B, n), R - 1, jnp.int32),   # start at the bottom
         promoted_at=jnp.full((B, n), -(10 ** 9), jnp.int32),
         demoted_at=jnp.full((B, n), -(10 ** 9), jnp.int32),
         t=jnp.zeros((), jnp.int32),
@@ -143,15 +169,17 @@ def _init_carry(spec, B: int, n: int, k: int, machine, keys):
     )
 
 
-def _simulate(spec, trace, oracle_mask, k: int, machine, mp, keys, sample,
+def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
               sampling: str, need_normal: bool, wl=None, wl_keys=None,
               noise_key=None, wl_rep: int = 1, n: int | None = None,
               wl_boost: bool = True):
     """Traceable batched replay; returns a dict of [B] scalars + timelines.
 
-    Lanes (= sweep entries) form the leading axis of every carried array
-    and of every leaf of ``spec``.  True counts come from one of two
-    sources:
+    Lanes (= sweep entries) form the leading axis of every carried array,
+    of every leaf of ``spec``, and of every leaf of ``mach`` (a
+    ``TieredMachineSpec`` with [B, R]-shaped tier leaves; ``caps`` is the
+    resolved i32 [B, R] per-tier capacity).  True counts come from one of
+    two sources:
       * trace mode (``wl is None``): ``trace`` is a host-materialized
         [T, n] array scanned as xs, with the host-computed ``oracle_mask``;
       * synth mode: ``wl`` is a [W]-lane-batched ``WorkloadSpec`` whose
@@ -266,29 +294,34 @@ def _simulate(spec, trace, oracle_mask, k: int, machine, mp, keys, sample,
         # it every interval.
         state, promote, demote = jax.lax.cond(jnp.any(do), fire, skip, state)
 
-        in_fast, pexec, dexec = jax.vmap(
-            simjax.apply_padded_migrations, in_axes=(0, 0, 0, None))(
-            c["in_fast"], promote, demote, k)
+        tier, pexec, dexec, mig_up, mig_down = jax.vmap(
+            simjax.apply_tier_migrations, in_axes=(0, 0, 0, 0))(
+            c["tier"], promote, demote, caps)
         n_promo = pexec.sum(axis=1).astype(jnp.int32)           # [B]
         n_demo = dexec.sum(axis=1).astype(jnp.int32)
         waste, promoted_at, demoted_at = jax.vmap(
             simjax.wasteful_update, in_axes=(None, 0, 0, 0, 0, 0, 0))(
             t - 1, c["promoted_at"], c["demoted_at"], promote, demote,
             pexec, dexec)
-        acc_fast, acc_slow, wall, slow_share, app_frac = jax.vmap(
-            simjax.interval_accounting, in_axes=(None, 0, 0, 0, 0))(
-            mp, true_b, in_fast, n_promo.astype(f32), n_demo.astype(f32))
+        acc_fast, acc_slow, wall, slow_share, app_raw = jax.vmap(
+            simjax.interval_accounting_impl)(
+            mach, true_b, tier, mig_up.astype(f32), mig_down.astype(f32))
         if cls.slow_access_extra_ns:
             # policy-mechanism overhead charged to the application (TPP's
             # NUMA hint faults are taken on slow-tier accesses).
             wall = wall + acc_slow * f32(cls.slow_access_extra_ns) \
-                * f32(1e-9) / mp.mlp
-        recall = (in_fast & orc_b).sum(axis=1).astype(f32) / k
+                * f32(1e-9) / mach.mlp
+        recall = ((tier == 0) & orc_b).sum(axis=1).astype(f32) / k
 
         new_c = dict(
-            state=state, in_fast=in_fast,
+            state=state, tier=tier,
             promoted_at=promoted_at, demoted_at=demoted_at, t=t, key=key,
-            slow_bw=slow_share, app_bw=app_frac,
+            slow_bw=slow_share,
+            # consumer-side clamp of the RAW tier-0 utilization: the
+            # policy-facing signal stays in [0,1] (bitwise the historical
+            # at-source clamp; the raw ratio keeps oversaturation visible
+            # to accounting consumers).
+            app_bw=jnp.minimum(1.0, app_raw),
             exec_time=c["exec_time"] + wall,
             promotions=c["promotions"] + n_promo,
             demotions=c["demotions"] + n_demo,
@@ -303,7 +336,7 @@ def _simulate(spec, trace, oracle_mask, k: int, machine, mp, keys, sample,
                   mode=vmode(spec, state), promos=n_promo)
         return new_c, ys
 
-    carry = _init_carry(spec, B, n, k, machine, keys)
+    carry = _init_carry(spec, B, n, k, mach, keys)
     if wl is None:
         trace = jnp.asarray(trace, f32)
         xs = (trace, jnp.asarray(oracle_mask, bool), sample)
@@ -323,10 +356,10 @@ def _simulate(spec, trace, oracle_mask, k: int, machine, mp, keys, sample,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "machine", "sampling", "need_normal"))
-def _sim_jit(spec, trace, oracle_mask, k, machine, mp, keys, sample,
+    jax.jit, static_argnames=("k", "sampling", "need_normal"))
+def _sim_jit(spec, trace, oracle_mask, k, mach, caps, keys, sample,
              sampling, need_normal):
-    return _simulate(spec, trace, oracle_mask, k, machine, mp, keys, sample,
+    return _simulate(spec, trace, oracle_mask, k, mach, caps, keys, sample,
                      sampling, need_normal)
 
 
@@ -346,21 +379,21 @@ def _precompute_observations(trace, u, periods: tuple, need_normal: bool):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "machine", "periods", "need_normal"))
-def _sim_pre_jit(spec, trace, oracle_mask, k, machine, mp, keys, u, periods,
+    jax.jit, static_argnames=("k", "periods", "need_normal"))
+def _sim_pre_jit(spec, trace, oracle_mask, k, mach, caps, keys, u, periods,
                  need_normal):
     obs = _precompute_observations(trace, u, periods, need_normal)
-    return _simulate(spec, trace, oracle_mask, k, machine, mp, keys, obs,
+    return _simulate(spec, trace, oracle_mask, k, mach, caps, keys, obs,
                      "pre", need_normal)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "machine", "sampling", "need_normal",
+    jax.jit, static_argnames=("k", "sampling", "need_normal",
                               "wl_rep", "n", "wl_boost"))
-def _sim_synth_jit(spec, wl, k, machine, mp, keys, sample, noise_key,
+def _sim_synth_jit(spec, wl, k, mach, caps, keys, sample, noise_key,
                    wl_keys, sampling, need_normal, wl_rep, n,
                    wl_boost=True):
-    return _simulate(spec, None, None, k, machine, mp, keys, sample,
+    return _simulate(spec, None, None, k, mach, caps, keys, sample,
                      sampling, need_normal, wl=wl, wl_keys=wl_keys,
                      noise_key=noise_key, wl_rep=wl_rep, n=n,
                      wl_boost=wl_boost)
@@ -411,6 +444,7 @@ def simulate(spec, trace, machine, k: int, seed: int = 0, sample_u=None,
              name: str | None = None) -> SimResult:
     """Device-resident replay of ``trace`` under any policy spec.
 
+    ``machine``: registry name / MachineSpec / TieredMachineSpec.
     ``sample_u``: optional [T, n] uniform field selecting the CRN sampling
     path (pass the same field to ``engine.run(..., sample_u=...)`` for an
     exactly-comparable reference run).  Default: PEBS noise drawn with
@@ -423,13 +457,13 @@ def simulate(spec, trace, machine, k: int, seed: int = 0, sample_u=None,
     sample = (jnp.asarray(sample_u, jnp.float32) if crn
               else jnp.zeros((trace.shape[0], 1), jnp.float32))
     keys = jax.random.PRNGKey(seed)[None]
+    mach, caps = _mach_lanes(machine, 1, trace.shape[1], k)
     out = _sim_jit(_lane_specs(spec, 1), jnp.asarray(trace, jnp.float32),
-                   jnp.asarray(oracle), k, machine,
-                   simjax.machine_params(machine), keys, sample,
+                   jnp.asarray(oracle), k, mach, caps, keys, sample,
                    "crn" if crn else "prng",
                    _need_normal(trace, spec.min_sampling_period()))
     _record_dispatch(lanes=1, sampling="crn" if crn else "prng",
-                     policy=spec.name)
+                     policy=spec.name, machines=1)
     return _to_result(_timelines_lane_major(out), 0, name or spec.name)
 
 
@@ -452,12 +486,14 @@ def sweep_seeds(trace, machine, k: int, seeds, cfg: ARMSConfig | None = None,
     trace = np.asarray(trace)
     oracle = oracle_topk_masks(trace, k)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    mach, caps = _mach_lanes(machine, len(seeds), trace.shape[1], k)
     out = _sim_jit(_lane_specs(spec, len(seeds)),
                    jnp.asarray(trace, jnp.float32), jnp.asarray(oracle), k,
-                   machine, simjax.machine_params(machine), keys,
+                   mach, caps, keys,
                    jnp.zeros((trace.shape[0], 1), jnp.float32), "prng",
                    _need_normal(trace, spec.min_sampling_period()))
-    _record_dispatch(lanes=len(seeds), sampling="prng", policy=spec.name)
+    _record_dispatch(lanes=len(seeds), sampling="prng", policy=spec.name,
+                     machines=1)
     out = _timelines_lane_major(out)
     return [_to_result(out, i, f"{spec.name}[seed={s}]")
             for i, s in enumerate(seeds)]
@@ -490,13 +526,13 @@ def sweep_policy_configs(spec_family, trace, machine, k: int, configs,
     assert sample_u.shape == (T, n)
     min_period = min(s.min_sampling_period() for s in specs)
     keys = jnp.stack([jax.random.PRNGKey(0)] * len(configs))
+    mach, caps = _mach_lanes(machine, len(configs), n, k)
     out = _sim_jit(spec, jnp.asarray(trace, jnp.float32),
-                   jnp.asarray(oracle), k, machine,
-                   simjax.machine_params(machine), keys,
+                   jnp.asarray(oracle), k, mach, caps, keys,
                    jnp.asarray(sample_u, jnp.float32), "crn",
                    _need_normal(trace, min_period))
     _record_dispatch(lanes=len(configs), sampling="crn",
-                     policy=specs[0].name)
+                     policy=specs[0].name, machines=1)
     out = _timelines_lane_major(out)
     labels = [",".join(f"{nm}={v:.6g}" for nm, v in sorted(cfg.items()))
               for cfg in configs]
@@ -542,12 +578,12 @@ def sweep_arms_configs(trace, machine, k: int, overrides: dict,
         sample_u = uniform_field(T, n, seed=seed)
     need_normal = _need_normal(trace, specs[0].min_sampling_period())
     keys = jnp.stack([jax.random.PRNGKey(0)] * B)
+    mach, caps = _mach_lanes(machine, B, n, k)
     out = _sim_pre_jit(spec, jnp.asarray(trace, jnp.float32),
-                       jnp.asarray(oracle), k, machine,
-                       simjax.machine_params(machine), keys,
+                       jnp.asarray(oracle), k, mach, caps, keys,
                        jnp.asarray(sample_u, jnp.float32),
                        ARMSSpec.PRE_PERIODS, need_normal)
-    _record_dispatch(lanes=B, sampling="pre", policy="arms")
+    _record_dispatch(lanes=B, sampling="pre", policy="arms", machines=1)
     out = _timelines_lane_major(out)
     labels = [",".join(f"{nm}={float(overrides[nm][b]):.4g}" for nm in names)
               for b in range(B)]
@@ -577,14 +613,16 @@ def simulate_workload(spec, workload, machine, k: int, T: int, n: int,
     else:
         sample = jnp.zeros((T, 1), jnp.float32)
     wl = _stack_workloads([workload])
+    mach, caps = _mach_lanes(machine, 1, n, k)
     out = _sim_synth_jit(
-        _lane_specs(spec, 1), wl, k, machine, simjax.machine_params(machine),
+        _lane_specs(spec, 1), wl, k, mach, caps,
         jax.random.PRNGKey(0)[None], sample, jax.random.PRNGKey(sim_seed),
         jax.random.PRNGKey(wl_seed)[None], "crn" if crn else "crn_prng",
         _synth_need_normal([workload], spec.min_sampling_period()), 1, n,
         wl_boost=workload.has_boost())
     _record_dispatch(lanes=1, sampling="crn" if crn else "crn_prng",
-                     policy=spec.name, synth=True, workloads=1, configs=1)
+                     policy=spec.name, synth=True, workloads=1, configs=1,
+                     machines=1)
     label = name or f"{spec.name}@{workload_spec.label_of(workload)}"
     return _to_result(_timelines_lane_major(out), 0, label)
 
@@ -611,16 +649,16 @@ def sweep_workloads(workloads, machine, k: int, T: int, n: int,
     W = len(workloads)
     names = list(names) if names is not None else [
         workload_spec.label_of(w, f"wl{i}") for i, w in enumerate(workloads)]
+    mach, caps = _mach_lanes(machine, W, n, k)
     out = _sim_synth_jit(
-        _lane_specs(spec, W), _stack_workloads(workloads), k, machine,
-        simjax.machine_params(machine),
+        _lane_specs(spec, W), _stack_workloads(workloads), k, mach, caps,
         jnp.stack([jax.random.PRNGKey(0)] * W),
         jnp.zeros((T, 1), jnp.float32), jax.random.PRNGKey(sim_seed),
         jnp.stack([jax.random.PRNGKey(wl_seed)] * W), "crn_prng",
         _synth_need_normal(workloads, spec.min_sampling_period()), 1, n,
         wl_boost=any(w.has_boost() for w in workloads))
     _record_dispatch(lanes=W, sampling="crn_prng", policy=spec.name,
-                     synth=True, workloads=W, configs=1)
+                     synth=True, workloads=W, configs=1, machines=1)
     out = _timelines_lane_major(out)
     return [_to_result(out, i, f"{spec.name}@{nm}")
             for i, nm in enumerate(names)]
@@ -657,9 +695,9 @@ def sweep_workload_configs(spec_family, configs, workloads, machine, k: int,
     else:
         sample = jnp.zeros((T, 1), jnp.float32)
     min_period = min(s.min_sampling_period() for s in pol_specs)
+    mach, caps = _mach_lanes(machine, W * B, n, k)
     out = _sim_synth_jit(
-        lane_spec, _stack_workloads(workloads), k, machine,
-        simjax.machine_params(machine),
+        lane_spec, _stack_workloads(workloads), k, mach, caps,
         jnp.stack([jax.random.PRNGKey(0)] * (W * B)), sample,
         jax.random.PRNGKey(sim_seed),
         jnp.stack([jax.random.PRNGKey(wl_seed)] * W),
@@ -668,7 +706,7 @@ def sweep_workload_configs(spec_family, configs, workloads, machine, k: int,
         wl_boost=any(w.has_boost() for w in workloads))
     _record_dispatch(lanes=W * B, sampling="crn" if crn else "crn_prng",
                      policy=pol_specs[0].name, synth=True, workloads=W,
-                     configs=B)
+                     configs=B, machines=1)
     out = _timelines_lane_major(out)
     labels = [",".join(f"{nm}={v:.6g}" for nm, v in sorted(cfg.items()))
               for cfg in configs]

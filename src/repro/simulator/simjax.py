@@ -7,6 +7,24 @@ the interval cost model are defined once here, as pure jax functions, and
 used by both.  The numpy engine calls them per interval in CRN mode (where
 bitwise agreement with the scan engine matters); the scan engine inlines
 them into its scan body.
+
+Since the N-tier machine protocol (simulator/machine_spec.py), placement
+is an i32 per-page **tier index** (0 = fastest) and migrations are
+adjacent-tier-pair hop chains; the two-tier boolean forms survive as thin
+wrappers (``apply_padded_migrations``) whose decisions the tier forms
+reproduce bitwise at N=2.
+
+Numerical layout notes (N=2 bitwise equivalence with the pre-N-tier
+engines): tier 0 charges app + migration bytes against one symmetric
+bandwidth in a single division; every lower tier charges reads and writes
+separately; the bottom tier's access count is computed by subtraction
+(total - upper tiers), matching the legacy ``acc_slow`` expression; the
+utilization ratios are returned RAW (a tier demanding more bandwidth-time
+than the rest of the interval reports > 1) and are clamped only at the
+signal consumer (the engines clamp the policy-facing ``app_bw`` signal;
+core/scheduler.batch_size clips its input) — ``min(1, raw)`` equals the
+old at-source clamp bitwise, while the raw value keeps the
+oversaturation magnitude visible.
 """
 from __future__ import annotations
 
@@ -14,59 +32,152 @@ import jax
 import jax.numpy as jnp
 
 from repro.simulator.engine import WASTE_WINDOW
-from repro.simulator.machine import CACHELINE, PAGE_BYTES, MachineSpec
-from repro.utils.pytree import pytree_dataclass
+from repro.simulator.machine import CACHELINE, PAGE_BYTES
 
 
-@pytree_dataclass
-class MachineParams:
-    """f32 leaves of a MachineSpec, so the cost model is scan/vmap friendly."""
+def tier_access_split(true, tier, R: int):
+    """Per-tier f32 access counts [R] + the f32 total.
 
-    lat_fast_ns: jnp.ndarray
-    lat_slow_ns: jnp.ndarray
-    bw_fast: jnp.ndarray
-    bw_slow_read: jnp.ndarray
-    bw_slow_write: jnp.ndarray
-    mlp: jnp.ndarray
-
-
-def machine_params(m: MachineSpec) -> MachineParams:
-    f = lambda v: jnp.asarray(v, jnp.float32)
-    return MachineParams(
-        lat_fast_ns=f(m.lat_fast_ns), lat_slow_ns=f(m.lat_slow_ns),
-        bw_fast=f(m.bw_fast), bw_slow_read=f(m.bw_slow_read),
-        bw_slow_write=f(m.bw_slow_write), mlp=f(m.mlp))
-
-
-def interval_outcome(mp: MachineParams, acc_fast, acc_slow, promo_pages,
-                     demo_pages):
-    """jnp mirror of machine.interval_time + the engine's signal derivation.
-
-    Returns (wall_s, slow_share, app_bw_frac):
-      * ``slow_share`` is the slow-access share the engine feeds to the PHT
-        (engine.py rationale: utilization pegs at 1 under saturation);
-      * ``app_bw_frac`` is fast-tier bandwidth utilization for BS throttling.
+    Tiers 0..R-2 are masked sums; the bottom tier is the sequential
+    remainder ``total - sum(upper)`` — at R=2 exactly the legacy
+    ``acc_slow = sum(true) - acc_fast``.
     """
-    app_fast_bytes = acc_fast * CACHELINE
-    app_slow_bytes = acc_slow * CACHELINE
-    mig_fast_bytes = (promo_pages + demo_pages) * PAGE_BYTES
-    mig_slow_read = promo_pages * PAGE_BYTES
-    mig_slow_write = demo_pages * PAGE_BYTES
+    total = jnp.sum(true)
+    accs = []
+    rest = total
+    for r in range(R - 1):
+        a = jnp.sum(true * (tier == r))
+        accs.append(a)
+        rest = rest - a
+    accs.append(rest)
+    return accs, total
 
-    t_lat = (acc_fast * mp.lat_fast_ns
-             + acc_slow * mp.lat_slow_ns) * 1e-9 / mp.mlp
-    t_bw_fast = (app_fast_bytes + mig_fast_bytes) / mp.bw_fast
-    t_bw_slow = ((app_slow_bytes + mig_slow_read) / mp.bw_slow_read
-                 + mig_slow_write / mp.bw_slow_write)
-    wall = jnp.maximum(jnp.maximum(t_lat, t_bw_fast),
-                       jnp.maximum(t_bw_slow, 1e-12))
-    slow_share = acc_slow / jnp.maximum(acc_fast + acc_slow, 1e-9)
-    app_frac = jnp.minimum(1.0, t_bw_fast / wall)
-    return wall, slow_share, app_frac
+
+def tier_interval_outcome(mach, acc, mig_up, mig_down):
+    """N-tier interval cost (jnp mirror of
+    machine_spec.interval_outcome_host, f32).
+
+    ``mach``: TieredMachineSpec leaves [R]; ``acc``: list/array of R f32
+    access counts; ``mig_up``/``mig_down``: f32 [R-1] pages crossing each
+    adjacent pair.  Returns (wall_s, slow_share, app_bw_frac_raw,
+    slow_bw_frac_raw); the *_raw ratios are unclamped (module docstring).
+    """
+    R = mach.lat_ns.shape[0]
+    lat, br, bw = mach.lat_ns, mach.bw_read, mach.bw_write
+
+    t_lat = acc[0] * lat[0]
+    for r in range(1, R):
+        t_lat = t_lat + acc[r] * lat[r]
+    t_lat = t_lat * 1e-9 / mach.mlp
+
+    # tier 0: one symmetric-bandwidth division (legacy fast-tier form).
+    times = [(acc[0] * CACHELINE
+              + (mig_up[0] + mig_down[0]) * PAGE_BYTES) / br[0]]
+    for r in range(1, R):
+        rd = mig_up[r - 1]
+        if r < R - 1:
+            rd = rd + mig_down[r]
+        wr = mig_down[r - 1]
+        if r < R - 1:
+            wr = wr + mig_up[r]
+        times.append((acc[r] * CACHELINE + rd * PAGE_BYTES) / br[r]
+                     + wr * PAGE_BYTES / bw[r])
+
+    rest_max = times[1]
+    for r in range(2, R):
+        rest_max = jnp.maximum(rest_max, times[r])
+    wall = jnp.maximum(jnp.maximum(t_lat, times[0]),
+                       jnp.maximum(rest_max, 1e-12))
+
+    rest_acc = acc[1]
+    for r in range(2, R):
+        rest_acc = rest_acc + acc[r]
+    slow_share = rest_acc / jnp.maximum(acc[0] + rest_acc, 1e-9)
+    app_raw = times[0] / jnp.maximum(t_lat, jnp.maximum(rest_max, 1e-12))
+    slow_raw = rest_max / jnp.maximum(t_lat, jnp.maximum(times[0], 1e-12))
+    return wall, slow_share, app_raw, slow_raw
+
+
+def interval_accounting_impl(mach, true_counts, tier, mig_up, mig_down):
+    """Full per-interval cost/accounting step, shared with the numpy engine.
+
+    Returns (acc_fast, acc_slow, wall_s, slow_share, app_bw_frac_raw) as
+    f32 scalars; acc_fast/acc_slow aggregate tier 0 vs everything below.
+    In CRN mode the numpy engine calls the jitted ``interval_accounting``
+    so its arithmetic is bit-identical to the scan engine's.
+    """
+    R = mach.lat_ns.shape[0]
+    true = jnp.asarray(true_counts, jnp.float32)
+    accs, _ = tier_access_split(true, tier, R)
+    wall, slow_share, app_raw, _ = tier_interval_outcome(
+        mach, accs, jnp.asarray(mig_up, jnp.float32),
+        jnp.asarray(mig_down, jnp.float32))
+    acc_slow = accs[1]
+    for r in range(2, R):
+        acc_slow = acc_slow + accs[r]
+    return accs[0], acc_slow, wall, slow_share, app_raw
+
+
+interval_accounting = jax.jit(interval_accounting_impl)
+
+
+# ------------------------------------------------------------- migrations
+def apply_tier_migrations(tier, promote, demote, caps):
+    """Adjacent-pair hop migrations over an i32 tier index, fixed shape.
+
+    ``promote``/``demote`` follow the padded-index contract
+    (baselines/protocol.py).  Demotions apply first, in priority order:
+    each valid entry (page not already in the bottom tier) cascades down
+    to the first tier below its source with free capacity — the bottom
+    (``caps[-1] == n``) always has room, so demotions never fail and no
+    tier exceeds its capacity.  Promotions then move pages to tier 0,
+    capped by tier-0 room after demotions; excess requests are dropped.
+    At N=2 the executed sets are bitwise those of the legacy boolean
+    ``apply_padded_migrations``.
+
+    Returns (tier, pexec, dexec, mig_up, mig_down): the new placement,
+    boolean executed masks aligned with the padded arrays, and i32 [R-1]
+    counts of pages crossing each adjacent pair (for per-tier bandwidth
+    charging).
+    """
+    R = caps.shape[0]
+    n = tier.shape[0]
+    i32 = jnp.int32
+
+    d_safe = jnp.where(demote >= 0, demote, 0)
+    src = tier[d_safe]
+    dexec = (demote >= 0) & (src < R - 1)
+    dest = jnp.full(demote.shape, R - 1, i32)
+    landed = jnp.zeros(demote.shape, bool)
+    for r in range(1, R - 1):
+        # occupancy after departures: every demoted page leaves its source
+        # tier (it always lands somewhere below), freeing that slot.
+        occ_r = (tier == r).sum() - (dexec & (src == r)).sum()
+        cand = dexec & (~landed) & (src < r)
+        rank = jnp.cumsum(cand.astype(i32)) - 1
+        land = cand & (rank < caps[r] - occ_r)
+        dest = jnp.where(land, r, dest)
+        landed = landed | land
+    tier = tier.at[jnp.where(dexec, demote, n)].set(dest, mode="drop")
+
+    p_safe = jnp.where(promote >= 0, promote, 0)
+    p_src = tier[p_safe]
+    p_ok = (promote >= 0) & (p_src > 0)
+    room = caps[0] - (tier == 0).sum().astype(i32)
+    rank = jnp.cumsum(p_ok.astype(i32)) - 1
+    pexec = p_ok & (rank < room)
+    tier = tier.at[jnp.where(pexec, promote, n)].set(0, mode="drop")
+
+    mig_up = jnp.stack([(pexec & (p_src > j)).sum().astype(i32)
+                        for j in range(R - 1)])
+    mig_down = jnp.stack([(dexec & (src <= j) & (dest > j)).sum().astype(i32)
+                          for j in range(R - 1)])
+    return tier, pexec, dexec, mig_up, mig_down
 
 
 def apply_padded_migrations(in_fast, promote, demote, k: int):
-    """Engine-side validation + capacity enforcement, fixed shape.
+    """Two-tier boolean form, kept for the policy-protocol property tests
+    and any binary-placement caller.
 
     ``promote``/``demote`` follow the padded-index contract
     (baselines/protocol.py): i32 arrays of independent widths whose ``-1``
@@ -118,21 +229,3 @@ def wasteful_update(t, promoted_at, demoted_at, promote, demote, pexec,
     demoted_at = demoted_at.at[jnp.where(dexec, demote, n)].set(
         t, mode="drop")
     return waste.astype(jnp.int32), promoted_at, demoted_at
-
-
-@jax.jit
-def interval_accounting(mp: MachineParams, true_counts, in_fast, promo_pages,
-                        demo_pages):
-    """Full per-interval cost/accounting step, shared with the numpy engine.
-
-    Returns (acc_fast, acc_slow, wall_s, slow_share, app_bw_frac) as f32
-    scalars; in CRN mode the numpy engine calls this so its arithmetic is
-    bit-identical to the scan engine's.
-    """
-    true = jnp.asarray(true_counts, jnp.float32)
-    acc_fast = jnp.sum(true * in_fast)
-    acc_slow = jnp.sum(true) - acc_fast
-    wall, slow_share, app_frac = interval_outcome(
-        mp, acc_fast, acc_slow, jnp.asarray(promo_pages, jnp.float32),
-        jnp.asarray(demo_pages, jnp.float32))
-    return acc_fast, acc_slow, wall, slow_share, app_frac

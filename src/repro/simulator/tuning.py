@@ -9,10 +9,11 @@ comparators — and ``tune_arms`` is the internal-knob sensitivity study
 
 All four are thin wrappers over one ``tune`` entry point: the whole search
 budget runs as ONE compiled ``lax.scan`` simulation batched over config
-lanes (``scan_engine.sweep_policy_configs``), with every lane sharing a
-common-random-number noise field — paired comparisons, so row ordering
-reflects the knobs alone, and identical to replaying each config through
-the numpy reference engine with the same field (asserted in tests).
+lanes (the config grid rides the policy axis of ``experiment.sweep``),
+with every lane sharing a common-random-number noise field — paired
+comparisons, so row ordering reflects the knobs alone, and identical to
+replaying each config through the numpy reference engine with the same
+field (asserted in tests).  Machines are accepted by registry name.
 
 Seeding is split on purpose: ``search_seed`` drives the config-grid draw,
 ``sim_seed`` the CRN workload noise.  (Earlier revisions used one ``seed``
@@ -29,7 +30,7 @@ from repro.baselines.arms_policy import ARMSSpec
 from repro.baselines.hemem import HeMemSpec
 from repro.baselines.memtis import MemtisSpec
 from repro.baselines.tpp import TPPSpec
-from repro.simulator import scan_engine, workload_spec
+from repro.simulator import experiment, scan_engine
 
 SPACE = dict(
     hot_threshold=[1, 2, 4, 8, 16, 32],
@@ -101,7 +102,8 @@ def tune(family: str, trace, machine, k, budget: int = 24,
 
     -> (best_config, best_result, all (config, result) rows sorted by exec
     time).  ``search_seed`` draws the config grid; ``sim_seed`` seeds the
-    shared CRN noise all lanes are scored under.
+    shared CRN noise all lanes are scored under.  ``machine`` may be a
+    registry name, a MachineSpec, or a TieredMachineSpec (machines.get).
 
     Workload-lane mode: pass ``workloads`` (a list of workload names or
     ``WorkloadSpec``s, plus ``T``/``n``; ``trace`` must then be None) to
@@ -109,6 +111,9 @@ def tune(family: str, trace, machine, k, budget: int = 24,
     W x budget lanes — traces are synthesized on device, nothing [T, n]
     is materialized, and the return value becomes a dict
     ``{workload_name: (best_config, best_result, rows)}``.
+
+    Both modes are thin views over ``experiment.sweep``: the config grid
+    rides the policy axis of the axis-product API.
     """
     if family not in FAMILIES:
         raise ValueError(f"unknown family {family!r}; "
@@ -117,36 +122,29 @@ def tune(family: str, trace, machine, k, budget: int = 24,
     configs = _sample_grid(space if space is not None else fam_space,
                            defaults if defaults is not None else fam_defaults,
                            budget, search_seed)
+    pol_specs = [make(**cfg) for cfg in configs]
     if workloads is not None:
         if trace is not None:
             raise ValueError("pass either trace or workloads, not both")
         if T is None or n is None:
             raise ValueError("workload-lane tuning needs T and n")
-        specs, names = [], []
-        for i, w in enumerate(workloads):
-            if isinstance(w, str):
-                specs.append(workload_spec.named(w, T=T))
-                names.append(w)
-            else:
-                specs.append(w)
-                names.append(workload_spec.label_of(w, f"wl{i}"))
-        # keys of the result dict: disambiguate duplicate labels (two
-        # combinator scenarios can share an auto-generated label) so no
-        # workload's rows are silently overwritten.
-        dup = {nm for nm in names if names.count(nm) > 1}
-        names = [f"{nm}#{i}" if nm in dup else nm
-                 for i, nm in enumerate(names)]
-        grid = scan_engine.sweep_workload_configs(
-            make, configs, specs, machine, k, T, n, sim_seed=sim_seed,
-            names=names)
+        res = experiment.sweep(pol_specs, workloads=list(workloads),
+                               machines=[machine], k=k, T=T, n=n,
+                               sim_seed=sim_seed)
+        # result-dict keys come straight from the sweep's workload axis
+        # (names resolved + duplicate labels disambiguated there), so the
+        # two label schemes cannot drift.
         out = {}
-        for nm, results in zip(names, grid):
+        for w, nm in enumerate(res.axes["workload"]):
+            results = [res.at(policy=b, workload=w)
+                       for b in range(len(configs))]
             rows = sorted(zip(configs, results),
                           key=lambda cr: cr[1].exec_time_s)
             out[nm] = (rows[0][0], rows[0][1], rows)
         return out
-    results = scan_engine.sweep_policy_configs(
-        make, trace, machine, k, configs, sim_seed=sim_seed)
+    res = experiment.sweep(pol_specs, trace=trace, machines=[machine], k=k,
+                           sim_seed=sim_seed)
+    results = [res.at(policy=b) for b in range(len(configs))]
     rows = sorted(zip(configs, results), key=lambda cr: cr[1].exec_time_s)
     best_cfg, best_res = rows[0]
     return best_cfg, best_res, rows
