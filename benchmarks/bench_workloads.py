@@ -22,6 +22,7 @@ import json
 import resource
 import time
 
+from benchmarks import common
 from repro.baselines.hemem import HeMemSpec
 from repro.simulator import scan_engine, workload_spec, workloads
 from repro.simulator.engine import oracle_topk_masks
@@ -60,14 +61,14 @@ def main():
     print(f"[bench_workloads] synth sweep: {W} workloads x {B} configs, "
           f"n={n} T={T} k={k}", flush=True)
     mat_before = workload_spec.MATERIALIZE_CALLS
-    t0 = time.time()
-    scan_engine.sweep_workload_configs(HeMemSpec.make, cfgs, specs,
-                                       PMEM_LARGE, k, T, n, names=wl_names)
-    rec["synth_sweep_cold_s"] = round(time.time() - t0, 3)
-    t0 = time.time()
-    scan_engine.sweep_workload_configs(HeMemSpec.make, cfgs, specs,
-                                       PMEM_LARGE, k, T, n, names=wl_names)
-    rec["synth_sweep_warm_s"] = round(time.time() - t0, 3)
+    _, cold_s = common.timed(
+        scan_engine.sweep_workload_configs, HeMemSpec.make, cfgs, specs,
+        PMEM_LARGE, k, T, n, names=wl_names)
+    rec["synth_sweep_cold_s"] = round(cold_s, 3)
+    _, warm_s = common.timed(
+        scan_engine.sweep_workload_configs, HeMemSpec.make, cfgs, specs,
+        PMEM_LARGE, k, T, n, names=wl_names)
+    rec["synth_sweep_warm_s"] = round(warm_s, 3)
     rec["synth_lanes"] = scan_engine.last_dispatch["lanes"]
     rec["synth_materialize_calls"] = \
         workload_spec.MATERIALIZE_CALLS - mat_before

@@ -54,14 +54,24 @@ def trace_for(wl: str, n=N_PAGES, t=T):
     return spec_for(wl, t=t).materialize(t, n)
 
 
+def timed(fn, *args, **kwargs):
+    """(result, seconds) with the timer stopped only after the FULL result
+    pytree is device-complete.  JAX dispatch is asynchronous: timing the
+    call alone measures enqueue, not execution, so warm BENCH_*.json
+    numbers would be understated.  ``block_until_ready`` traverses any
+    pytree and no-ops on non-array leaves (SimResult floats etc.)."""
+    import jax
+
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args, **kwargs))
+    return out, time.perf_counter() - t0
+
+
 def run_policy(policy_name: str, trace, machine="pmem-large", k=K, seed=0):
     """``machine`` may be a registry name, MachineSpec, or
     TieredMachineSpec — resolution is one ``machines.get`` inside the
     engine."""
-    t0 = time.time()
-    res = run(POLICIES[policy_name](), trace, machine, k, seed=seed)
-    wall = time.time() - t0
-    return res, wall
+    return timed(run, POLICIES[policy_name](), trace, machine, k, seed=seed)
 
 
 def geomean(xs):

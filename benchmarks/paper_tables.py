@@ -176,14 +176,12 @@ def bench_machine_sweep_gate():
     P, M = len(specs), len(mach_names)
     wl = workload_spec.named("silo-tpcc", T=T_)
 
-    t0 = time.time()
-    res = experiment.sweep(specs, workloads=[wl], machines=mach_names,
-                           k=k, T=T_, n=n, sim_seed=sim_seed)
-    cold = time.time() - t0
-    t0 = time.time()
-    experiment.sweep(specs, workloads=[wl], machines=mach_names,
-                     k=k, T=T_, n=n, sim_seed=sim_seed)
-    warm = time.time() - t0
+    res, cold = common.timed(
+        experiment.sweep, specs, workloads=[wl], machines=mach_names,
+        k=k, T=T_, n=n, sim_seed=sim_seed)
+    _, warm = common.timed(
+        experiment.sweep, specs, workloads=[wl], machines=mach_names,
+        k=k, T=T_, n=n, sim_seed=sim_seed)
 
     d = dict(scan_engine.last_dispatch)
     claim("machine sweep runs as ONE P*M-lane dispatch",
@@ -215,6 +213,100 @@ def bench_machine_sweep_gate():
                    for m in mach_names})
     with open("BENCH_machines.json", "w") as f:
         json.dump(rec, f, indent=1)
+        f.write("\n")
+
+
+# --------------- CI gate: fused interval path + streaming reduction
+def bench_kernel_gate():
+    """Quick-gate for the fused interval fast path: (a) the fused route
+    (``use_interval_kernel``, default) must be BITWISE identical to the
+    unfused scan under the shared CRN field for every policy family on a
+    2-tier and a 3-tier machine — scalars and all four timelines; (b) a
+    default sweep must run under streaming reduction with no [T, ...]
+    output anywhere (checked structurally here at gate scale and by
+    abstract evaluation at n=65536/T=4096).  Records warm fused-vs-unfused
+    step time in BENCH_kernels.json."""
+    import json
+
+    from benchmarks import bench_kernels
+    from repro.simulator import experiment
+
+    T_, n, k, sim_seed = 96, 256, 32, 2
+    fams = ["arms", "hemem", "memtis", "tpp", "all-slow", "oracle"]
+    machs = ["pmem-large", "dram-cxl-pmem"]
+    trace = workloads.make("silo-tpcc", T=T_, n=n)
+    u = uniform_field(T_, n, seed=sim_seed)
+
+    fused, cold = common.timed(
+        experiment.sweep, fams, trace=trace, machines=machs, k=k,
+        sample_u=u, timelines=True)
+    plain, _ = common.timed(
+        experiment.sweep, fams, trace=trace, machines=machs, k=k,
+        sample_u=u, timelines=True, use_interval_kernel=False)
+    bad = []
+    for (where, a), (_, b) in zip(fused.items(), plain.items()):
+        same = (a.promotions, a.demotions, a.wasteful) \
+            == (b.promotions, b.demotions, b.wasteful) \
+            and a.exec_time_s == b.exec_time_s \
+            and a.hot_recall == b.hot_recall \
+            and all(np.array_equal(getattr(a, f), getattr(b, f))
+                    for f in ("timeline_slow_bw", "timeline_fast_hits",
+                              "timeline_mode", "timeline_promotions"))
+        if not same:
+            bad.append(f"{where['policy']}@{where['machine']}")
+    claim("fused interval path bitwise == unfused (CRN, all families)",
+          f"{len(fams)} families x {machs} (2- and 3-tier): "
+          + ("all equal" if not bad else "DIFF " + ",".join(bad)),
+          "every scalar and timeline bitwise identical", not bad)
+
+    # streaming is the sweep default: no [T, ...] output, summaries set
+    res, _ = common.timed(
+        experiment.sweep, ["hemem", "arms"], workloads=["gups"],
+        machines=machs, k=k, T=T_, n=n, sim_seed=sim_seed)
+    d = dict(scan_engine.last_dispatch)
+    stream_ok = d.get("reduce") == "stream" and all(
+        r.timeline_slow_bw is None and r.mean_slow_bw is not None
+        for _, r in res.items())
+    alloc = bench_kernels.stream_alloc_proof()
+    claim("streaming sweep allocates no [T, ...] timeline",
+          f"dispatch reduce={d.get('reduce')}; eval_shape at "
+          f"n={alloc['n_pages']}/T={alloc['T']}: "
+          f"{alloc['stream_T_sized_outputs']} T-sized outputs "
+          f"(stack: {alloc['stack_T_sized_outputs']})",
+          "reduce=stream, 0 T-sized output leaves, summaries populated",
+          stream_ok and alloc["stream_T_sized_outputs"] == 0
+          and alloc["stack_T_sized_outputs"] > 0)
+
+    # warm fused vs unfused step time at gate scale -> BENCH_kernels.json
+    # (benchmarks/bench_kernels.py re-measures at full n=65536/T=4096).
+    _, warm_fused = common.timed(
+        experiment.sweep, fams, trace=trace, machines=machs, k=k,
+        sample_u=u, timelines=True)
+    _, warm_unfused = common.timed(
+        experiment.sweep, fams, trace=trace, machines=machs, k=k,
+        sample_u=u, timelines=True, use_interval_kernel=False)
+    emit("kernel_gate.fused_sweep", warm_fused * 1e6,
+         f"families={len(fams)};machines={len(machs)};cold_s={cold:.3f};"
+         f"unfused_warm_us={warm_unfused * 1e6:.0f}")
+    rec = dict(scale="gate-quick", workload="silo-tpcc", n_pages=n, T=T_,
+               k=k, families=fams, machines=machs,
+               bitwise_equal=not bad, streaming_default=stream_ok,
+               cold_fused_s=round(cold, 3),
+               warm_fused_s=round(warm_fused, 3),
+               warm_unfused_s=round(warm_unfused, 3),
+               step_time_win=round(warm_unfused / max(warm_fused, 1e-9),
+                                   3),
+               stream_alloc=alloc)
+    # merge under "gate" so the full-scale record written by
+    # benchmarks/bench_kernels.py survives CI passes.
+    try:
+        with open("BENCH_kernels.json") as f:
+            out = json.load(f)
+    except (OSError, ValueError):
+        out = {}
+    out["gate"] = rec
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(out, f, indent=1)
         f.write("\n")
 
 

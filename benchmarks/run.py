@@ -27,10 +27,14 @@ def main() -> None:
     # workload-lane sweeps must stay on the device-synthesis path (never
     # host-materializing a [T, n] trace), and machine-axis sweeps must
     # compile to ONE P*M-lane dispatch (no per-machine recompiles) —
-    # recorded in BENCH_machines.json.
+    # recorded in BENCH_machines.json.  The kernel gate asserts the fused
+    # interval path stays bitwise-identical to the unfused scan under CRN
+    # and that default sweeps stream (no [T, ...] timeline allocation) —
+    # recorded in BENCH_kernels.json.
     pt.bench_baseline_sweep_gate()
     pt.bench_workload_sweep_gate()
     pt.bench_machine_sweep_gate()
+    pt.bench_kernel_gate()
     pt.bench_machine_sensitivity()
     pt.bench_main_comparison()
     pt.bench_migrations()

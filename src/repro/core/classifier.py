@@ -39,20 +39,24 @@ def update_scores(state: TieringState, access_counts, cfg: ARMSConfig,
                   mode) -> TieringState:
     """Algorithm 1 lines 1-6: EWMA + hotness score update (vectorized).
 
-    Routed through the fused Pallas kernel (kernels/score_update) unless
-    ``cfg.use_score_kernel`` is False; both paths compute the identical f32
-    formula, so they are interchangeable numerically.
+    Routed through the fused interval-step EWMA op
+    (kernels/interval_step.ops.ewma_score_update: Pallas kernel on TPU,
+    fused jnp on other backends) unless ``cfg.use_score_kernel`` is False,
+    which pins the jnp reference; every route computes the identical f32
+    formula.  The op is lane-batched, so the [n] arrays ride a width-1
+    batch axis (an outer ``vmap`` — the scan engine's lane batching —
+    turns it into the real lane axis).
     """
-    from repro.kernels.score_update.ops import score_update
+    from repro.kernels.interval_step.ops import ewma_score_update
 
     x = jnp.asarray(access_counts, jnp.float32)
     w_s, w_l = score_weights(cfg, mode)
-    ewma_s, ewma_l, score = score_update(
-        state.ewma_s, state.ewma_l, x,
+    ewma_s, ewma_l, score = ewma_score_update(
+        state.ewma_s[None], state.ewma_l[None], x[None],
         alpha_s=cfg.alpha_s, alpha_l=cfg.alpha_l, w_s=w_s, w_l=w_l,
         use_kernel=bool(getattr(cfg, "use_score_kernel", True)))
-    return state.replace(ewma_s=ewma_s, ewma_l=ewma_l,
-                         prev_score=state.score, score=score)
+    return state.replace(ewma_s=ewma_s[0], ewma_l=ewma_l[0],
+                         prev_score=state.score, score=score[0])
 
 
 def topk_hot_mask(score: jnp.ndarray, k: int):

@@ -1,0 +1,35 @@
+"""Module-cached backend probe shared by every ``kernels/*/ops.py``.
+
+Every op wrapper used to call ``jax.default_backend() != "tpu"`` on each
+invocation to decide whether the Pallas kernel should run compiled or in
+interpret mode.  Inside the scan engine that probe sat on the per-interval
+hot path (one backend-registry lookup per op per interval per lane), so it
+is resolved ONCE at import of the first op module and cached here.
+
+``REPRO_FORCE_INTERPRET=1`` (any non-empty value other than ``0``) forces
+interpret mode regardless of backend — the switch the kernel-vs-ref CI
+checks use to exercise the Pallas path on CPU containers.
+"""
+from __future__ import annotations
+
+import os
+
+_INTERPRET: bool | None = None
+
+
+def force_interpret() -> bool:
+    """Did the environment pin interpret mode (``REPRO_FORCE_INTERPRET``)?"""
+    return os.environ.get("REPRO_FORCE_INTERPRET", "0") not in ("", "0")
+
+
+def interpret_mode() -> bool:
+    """True when Pallas kernels must run interpreted (non-TPU backend or
+    ``REPRO_FORCE_INTERPRET``).  The backend probe runs once per process;
+    jax backends cannot change after initialization, so caching is safe.
+    """
+    global _INTERPRET
+    if _INTERPRET is None:
+        import jax
+
+        _INTERPRET = force_interpret() or jax.default_backend() != "tpu"
+    return _INTERPRET

@@ -1,8 +1,7 @@
 """jit'd public wrapper for flash attention (prefill / training forward)."""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels._backend import interpret_mode
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
@@ -11,6 +10,5 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     use_kernel: bool = True):
     if not use_kernel:
         return flash_attention_ref(q, k, v, causal=causal, window=window)
-    interpret = jax.default_backend() != "tpu"
     return flash_attention_kernel(q, k, v, causal=causal, window=window,
-                                  interpret=interpret)
+                                  interpret=interpret_mode())

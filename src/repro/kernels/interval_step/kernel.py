@@ -1,0 +1,351 @@
+"""Pallas TPU kernels: fused per-interval fast path of the scan engine.
+
+Four kernels, one grid step per sweep lane (grid = (B,)), each fusing a
+stage of scan_engine's interval body that the unfused path spreads over
+many small XLA ops:
+
+  * ``topk_mask_kernel``    — exact top-k mask by threshold bisection over
+    the uint32 order key (32 count-passes) plus an index bisection for the
+    tie-break (no ``lax.top_k`` partial sort, no scatter, no cumsum — the
+    tie rule still matches ``lax.top_k`` exactly: strictly-greater first,
+    ascending index among threshold-equal values);
+  * ``tier_migrate_kernel`` — the adjacent-pair hop-chain migration engine
+    as a per-lane sequential sweep over the padded plans with per-tier
+    occupancy counters (equivalent to the vectorized simjax form for
+    plans whose valid page indices are unique — the padded-index
+    contract);
+  * ``interval_account_kernel`` — per-tier access split, interval cost and
+    oracle recall in ONE pass over the [n] row;
+  * ``ewma_update_kernel``  — the lane-batched dual-EWMA + score update
+    (kernels/score_update generalized to [B, n] with per-lane weights).
+
+All four run compiled on TPU and in interpret mode elsewhere; their
+bitwise contracts are the references in ref.py (tests/test_interval_step).
+f32 row reductions accumulate in row-major element order, matching the
+XLA CPU reduce the references lower to; on compiled TPU the tiled reduce
+may associate differently — the ops layer only selects these kernels on
+TPU, where every path goes through them consistently.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.simulator.machine import CACHELINE, PAGE_BYTES
+
+LANE = 128          # f32 minor-dim tile
+
+
+def _padded(n: int) -> int:
+    return max(LANE, -(-n // LANE) * LANE)
+
+
+def _pad_cols(x, fill):
+    n = x.shape[-1]
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, _padded(n) - n)],
+                   constant_values=fill)
+
+
+# ------------------------------------------------------------ top-k mask
+def _topk_body(n: int, k: int, x_ref, out_ref):
+    x = x_ref[...]                                        # (1, n_pad) f32
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    valid = iota < n
+    u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    # sign-magnitude bit order (ref._order_key): sign BIT, not x < 0, so
+    # +0.0 ranks strictly above -0.0 exactly like lax.top_k.
+    sign = jnp.uint32(0x80000000)
+    key = jnp.where((u & sign) != 0, ~u, u | sign)
+    key = jnp.where(valid, key, 0)                        # pads never win
+
+    def val_bit(i, t):
+        cand = t | (jnp.uint32(1) << (31 - i).astype(jnp.uint32))
+        cnt = jnp.sum((key >= cand).astype(jnp.int32))
+        return jnp.where(cnt >= k, cand, t)
+
+    t = jax.lax.fori_loop(0, 32, val_bit, jnp.uint32(0))
+    greater = key > t
+    eq = (key == t) & valid
+    need = k - jnp.sum(greater.astype(jnp.int32))         # >= 1 always
+
+    # largest m with count(eq & iota < m) < need; ties are then iota <= m.
+    # Bits 30..0 cover any n (i32 iota); bit 31 would wrap negative.
+    def idx_bit(i, m):
+        cand = m + (jnp.int32(1) << (31 - i))
+        cnt = jnp.sum((eq & (iota < cand)).astype(jnp.int32))
+        return jnp.where(cnt < need, cand, m)
+
+    m = jax.lax.fori_loop(1, 32, idx_bit, jnp.int32(0))
+    out_ref[...] = (greater | (eq & (iota <= m))).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_mask_kernel(x, k: int, *, interpret: bool = True):
+    B, n = x.shape
+    xp = _pad_cols(jnp.asarray(x, jnp.float32), 0.0)
+    spec = pl.BlockSpec((1, xp.shape[1]), lambda b: (b, 0))
+    out = pl.pallas_call(
+        functools.partial(_topk_body, n, k),
+        grid=(B,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.int32),
+        interpret=interpret,
+    )(xp)
+    return out[:, :n] != 0
+
+
+# ------------------------------------------------------- tier migrations
+def _migrate_body(R: int, n: int, tier_ref, promote_ref, demote_ref,
+                  caps_ref, tier_out, pexec_ref, dexec_ref, mig_up_ref,
+                  mig_down_ref, dest_ref):
+    i32 = jnp.int32
+    tier = tier_ref[...]                                  # (1, n_pad) i32
+    iota_pg = jax.lax.broadcasted_iota(i32, tier.shape, 1)
+    valid_pg = iota_pg < n
+    iota_r = jax.lax.iota(i32, R)
+    D = demote_ref.shape[1]
+    P = promote_ref.shape[1]
+
+    def occupancy(t_row, r):
+        return jnp.sum(((t_row == r) & valid_pg).astype(i32))
+
+    # pass 1: validity + per-tier departure counts (sources read from the
+    # ORIGINAL placement, as the vectorized form gathers them up front).
+    def dep_step(i, dep):
+        d = demote_ref[0, i]
+        src = tier_ref[0, jnp.maximum(d, 0)]
+        dx = (d >= 0) & (src < R - 1)
+        return dep + dx.astype(i32) * (iota_r == src)
+
+    dep = jax.lax.fori_loop(0, D, dep_step, jnp.zeros((R,), i32))
+
+    # per-middle-tier slack once departures free their slots (the same
+    # "occupancy after ALL departures" the vectorized form ranks against).
+    slack = [i32(0)]
+    for r in range(1, R - 1):
+        slack.append(caps_ref[0, r] - (occupancy(tier, r) - dep[r]))
+    slack = slack + [i32(n)]                              # bottom: room
+
+    # pass 2: land each demotion at the first middle tier below its source
+    # with room left; entry order within a tier matches the cumsum rank.
+    def land_step(i, land_cnt):
+        d = demote_ref[0, i]
+        src = tier_ref[0, jnp.maximum(d, 0)]
+        dx = (d >= 0) & (src < R - 1)
+        dest = i32(R - 1)
+        for r in range(R - 2, 0, -1):      # try lowest r > src first
+            room = (slack[r] - land_cnt[r]) > 0
+            dest = jnp.where((src < r) & room, i32(r), dest)
+        dest = jnp.where(dx, dest, i32(R - 1))
+        dexec_ref[0, i] = dx
+        dest_ref[i] = dest
+        return land_cnt + dx.astype(i32) * (iota_r == dest)
+
+    jax.lax.fori_loop(0, D, land_step, jnp.zeros((R,), i32))
+
+    # pass 3: apply demotions + accumulate adjacent-pair down-crossings.
+    tier_out[...] = tier
+    iota_pair = jax.lax.iota(i32, R - 1)
+
+    def apply_down(i, mig_down):
+        d = demote_ref[0, i]
+        src = tier_ref[0, jnp.maximum(d, 0)]
+        dx = dexec_ref[0, i]
+        dest = dest_ref[i]
+        idx = jnp.where(dx, d, 0)
+        tier_out[0, idx] = jnp.where(dx, dest, tier_out[0, idx])
+        cross = dx & (src <= iota_pair) & (dest > iota_pair)
+        return mig_down + cross.astype(i32)
+
+    mig_down = jax.lax.fori_loop(0, D, apply_down, jnp.zeros((R - 1,), i32))
+
+    # pass 4: promotions to tier 0, capped by room after demotions; the
+    # rank counts every valid request (not only executed ones), matching
+    # the vectorized cumsum rule.  Sources read post-demotion, pre-write.
+    room0 = caps_ref[0, 0] - occupancy(tier_out[...], 0)
+
+    def promo_step(i, carry):
+        cnt, mig_up = carry
+        p = promote_ref[0, i]
+        src = tier_out[0, jnp.maximum(p, 0)]
+        ok = (p >= 0) & (src > 0)
+        ex = ok & (cnt < room0)
+        pexec_ref[0, i] = ex
+        cross = ex & (src > iota_pair)
+        return cnt + ok.astype(i32), mig_up + cross.astype(i32)
+
+    _, mig_up = jax.lax.fori_loop(
+        0, P, promo_step, (i32(0), jnp.zeros((R - 1,), i32)))
+
+    def apply_up(i, _):
+        p = promote_ref[0, i]
+        ex = pexec_ref[0, i]
+        idx = jnp.where(ex, p, 0)
+        tier_out[0, idx] = jnp.where(ex, i32(0), tier_out[0, idx])
+        return 0
+
+    jax.lax.fori_loop(0, P, apply_up, 0)
+    mig_up_ref[...] = mig_up[None]
+    mig_down_ref[...] = mig_down[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tier_migrate_kernel(tier, promote, demote, caps, *,
+                        interpret: bool = True):
+    B, n = tier.shape
+    R = caps.shape[1]
+    P, D = promote.shape[1], demote.shape[1]
+    tp = _pad_cols(tier, R)                  # pad tier R: matches no r
+    row = pl.BlockSpec((1, tp.shape[1]), lambda b: (b, 0))
+
+    def entries(x, w):
+        # zero-width plans get one always-invalid pad entry so the kernel
+        # keeps a non-empty block; outputs are sliced back to width 0.
+        if w == 0:
+            x = jnp.full((B, 1), -1, jnp.int32)
+        return x, pl.BlockSpec((1, max(w, 1)), lambda b: (b, 0))
+
+    promote_in, pspec = entries(promote, P)
+    demote_in, dspec = entries(demote, D)
+    outs = pl.pallas_call(
+        functools.partial(_migrate_body, R, n),
+        grid=(B,),
+        in_specs=[row, pspec, dspec,
+                  pl.BlockSpec((1, R), lambda b: (b, 0))],
+        out_specs=[row, pspec, dspec,
+                   pl.BlockSpec((1, R - 1), lambda b: (b, 0)),
+                   pl.BlockSpec((1, R - 1), lambda b: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct(tp.shape, jnp.int32),
+                   jax.ShapeDtypeStruct((B, max(P, 1)), jnp.bool_),
+                   jax.ShapeDtypeStruct((B, max(D, 1)), jnp.bool_),
+                   jax.ShapeDtypeStruct((B, R - 1), jnp.int32),
+                   jax.ShapeDtypeStruct((B, R - 1), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((max(D, 1),), jnp.int32)],
+        interpret=interpret,
+    )(tp, promote_in, demote_in, caps)
+    new_tier, pexec, dexec, mig_up, mig_down = outs
+    return (new_tier[:, :n], pexec[:, :P], dexec[:, :D], mig_up, mig_down)
+
+
+# --------------------------------------------------- interval accounting
+def _account_body(R: int, n: int, k: int, lat_ref, br_ref, bw_ref, mlp_ref,
+                  true_ref, tier_ref, up_ref, down_ref, orc_ref, out_ref):
+    true = true_ref[...]                                  # (1, n_pad) f32
+    tier = tier_ref[...]
+    orc = orc_ref[...]
+    mlp = mlp_ref[0, 0]
+
+    total = jnp.sum(true)
+    accs, rest = [], total
+    for r in range(R - 1):
+        a = jnp.sum(true * (tier == r))
+        accs.append(a)
+        rest = rest - a
+    accs.append(rest)
+
+    t_lat = accs[0] * lat_ref[0, 0]
+    for r in range(1, R):
+        t_lat = t_lat + accs[r] * lat_ref[0, r]
+    t_lat = t_lat * 1e-9 / mlp
+
+    times = [(accs[0] * CACHELINE
+              + (up_ref[0, 0] + down_ref[0, 0]) * PAGE_BYTES)
+             / br_ref[0, 0]]
+    for r in range(1, R):
+        rd = up_ref[0, r - 1]
+        if r < R - 1:
+            rd = rd + down_ref[0, r]
+        wr = down_ref[0, r - 1]
+        if r < R - 1:
+            wr = wr + up_ref[0, r]
+        times.append((accs[r] * CACHELINE + rd * PAGE_BYTES) / br_ref[0, r]
+                     + wr * PAGE_BYTES / bw_ref[0, r])
+
+    rest_max = times[1]
+    for r in range(2, R):
+        rest_max = jnp.maximum(rest_max, times[r])
+    wall = jnp.maximum(jnp.maximum(t_lat, times[0]),
+                       jnp.maximum(rest_max, 1e-12))
+
+    rest_acc = accs[1]
+    for r in range(2, R):
+        rest_acc = rest_acc + accs[r]
+    slow_share = rest_acc / jnp.maximum(accs[0] + rest_acc, 1e-9)
+    app_raw = times[0] / jnp.maximum(t_lat, jnp.maximum(rest_max, 1e-12))
+    recall = jnp.sum(((tier == 0) & (orc != 0)).astype(jnp.int32)) \
+        .astype(jnp.float32) / k
+
+    out_ref[0, 0] = accs[0]
+    out_ref[0, 1] = rest_acc
+    out_ref[0, 2] = wall
+    out_ref[0, 3] = slow_share
+    out_ref[0, 4] = app_raw
+    out_ref[0, 5] = recall
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def interval_account_kernel(lat, br, bw, mlp, true, tier, mig_up, mig_down,
+                            oracle, k: int, *, interpret: bool = True):
+    """Fused per-lane accounting: lat/br/bw [B, R] f32, mlp [B] f32,
+    true [B, n] f32, tier [B, n] i32, mig_up/mig_down [B, R-1] f32,
+    oracle [B, n] bool.  Returns the six [B] f32 outputs of
+    ``ref.interval_account_ref``."""
+    B, n = true.shape
+    R = lat.shape[1]
+    row = pl.BlockSpec((1, _padded(n)), lambda b: (b, 0))
+    tiers = pl.BlockSpec((1, R), lambda b: (b, 0))
+    pairs = pl.BlockSpec((1, R - 1), lambda b: (b, 0))
+    out = pl.pallas_call(
+        functools.partial(_account_body, R, n, k),
+        grid=(B,),
+        in_specs=[tiers, tiers, tiers,
+                  pl.BlockSpec((1, 1), lambda b: (b, 0)),
+                  row, row, pairs, pairs, row],
+        out_specs=pl.BlockSpec((1, 6), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 6), jnp.float32),
+        interpret=interpret,
+    )(lat, br, bw, mlp[:, None], _pad_cols(true, 0.0),
+      _pad_cols(tier, R), mig_up, mig_down,
+      _pad_cols(oracle.astype(jnp.int32), 0))
+    return tuple(out[:, i] for i in range(6))
+
+
+# -------------------------------------------------------- EWMA + score
+def _ewma_body(p_ref, s_ref, l_ref, c_ref, s_out, l_out, score_out):
+    b = pl.program_id(0)
+    a_s, a_l = p_ref[b, 0], p_ref[b, 1]
+    w_s, w_l = p_ref[b, 2], p_ref[b, 3]
+    c = c_ref[...]
+    s = a_s * c + (1 - a_s) * s_ref[...]
+    ll = a_l * c + (1 - a_l) * l_ref[...]
+    s_out[...] = s
+    l_out[...] = ll
+    score_out[...] = w_s * s + w_l * ll
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ewma_update_kernel(ewma_s, ewma_l, counts, *, alpha_s, alpha_l, w_s,
+                       w_l, interpret: bool = True):
+    """Lane-batched dual-EWMA + score: arrays [B, n] f32; each smoothing /
+    weight param a scalar or [B] (per-lane traced values — mode-dependent
+    score weights ride the lane axis)."""
+    B, n = ewma_s.shape
+    params = jnp.stack([jnp.broadcast_to(jnp.asarray(v, jnp.float32), (B,))
+                        for v in (alpha_s, alpha_l, w_s, w_l)], axis=1)
+    row = pl.BlockSpec((1, _padded(n)), lambda b: (b, 0))
+    outs = pl.pallas_call(
+        _ewma_body,
+        grid=(B,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), row, row, row],
+        out_specs=[row, row, row],
+        out_shape=[jax.ShapeDtypeStruct((B, _padded(n)), jnp.float32)
+                   for _ in range(3)],
+        interpret=interpret,
+    )(params, _pad_cols(ewma_s, 0.0), _pad_cols(ewma_l, 0.0),
+      _pad_cols(counts, 0.0))
+    return tuple(o[:, :n] for o in outs)

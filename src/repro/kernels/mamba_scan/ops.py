@@ -1,8 +1,7 @@
 """jit'd public wrapper for the fused SSD scan kernel."""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels._backend import interpret_mode
 from repro.kernels.mamba_scan.kernel import mamba_scan_kernel
 from repro.kernels.mamba_scan.ref import mamba_scan_ref
 
@@ -11,6 +10,5 @@ def mamba_scan(x, dt, A, Bm, Cm, *, chunk: int = 64,
                use_kernel: bool = True):
     if not use_kernel:
         return mamba_scan_ref(x, dt, A, Bm, Cm, chunk)
-    interpret = jax.default_backend() != "tpu"
     return mamba_scan_kernel(x, dt, A, Bm, Cm, chunk=chunk,
-                             interpret=interpret)
+                             interpret=interpret_mode())

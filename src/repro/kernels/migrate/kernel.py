@@ -38,6 +38,8 @@ def _kernel(src_idx_ref, dst_idx_ref, valid_ref, src_ref, dst_in_ref,
 def migrate_kernel(src_pool, dst_pool, src_idx, dst_idx, valid,
                    *, interpret: bool = True):
     M = src_idx.shape[0]
+    if M == 0:            # empty batch: zero-size grids don't lower
+        return dst_pool
     _, page, feat = src_pool.shape
 
     def src_map(i, src, dst, val):

@@ -1,8 +1,7 @@
 """jit'd public wrapper for the batched page-migration engine."""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels._backend import interpret_mode
 from repro.kernels.migrate.kernel import migrate_kernel
 from repro.kernels.migrate.ref import migrate_ref
 
@@ -11,6 +10,5 @@ def migrate_pages(src_pool, dst_pool, src_idx, dst_idx, valid,
                   *, use_kernel: bool = True):
     if not use_kernel:
         return migrate_ref(src_pool, dst_pool, src_idx, dst_idx, valid)
-    interpret = jax.default_backend() != "tpu"
     return migrate_kernel(src_pool, dst_pool, src_idx, dst_idx, valid,
-                          interpret=interpret)
+                          interpret=interpret_mode())

@@ -6,8 +6,7 @@ bit-level validation against ref.py.
 """
 from __future__ import annotations
 
-import jax
-
+from repro.kernels._backend import interpret_mode
 from repro.kernels.paged_attention.kernel import paged_attention_kernel
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
@@ -17,6 +16,5 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
     if not use_kernel:
         return paged_attention_ref(q, k_pages, v_pages, block_tables,
                                    seq_lens)
-    interpret = jax.default_backend() != "tpu"
     return paged_attention_kernel(q, k_pages, v_pages, block_tables,
-                                  seq_lens, interpret=interpret)
+                                  seq_lens, interpret=interpret_mode())

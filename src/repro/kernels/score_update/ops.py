@@ -7,8 +7,7 @@ routes through here (kernel by default, interpret-mode on non-TPU backends;
 """
 from __future__ import annotations
 
-import jax
-
+from repro.kernels._backend import interpret_mode
 from repro.kernels.score_update.kernel import score_update_kernel
 from repro.kernels.score_update.ref import score_update_ref
 
@@ -18,7 +17,6 @@ def score_update(ewma_s, ewma_l, counts, *, alpha_s, alpha_l, w_s, w_l,
     if not use_kernel:
         return score_update_ref(ewma_s, ewma_l, counts, alpha_s=alpha_s,
                                 alpha_l=alpha_l, w_s=w_s, w_l=w_l)
-    interpret = jax.default_backend() != "tpu"
     return score_update_kernel(ewma_s, ewma_l, counts, alpha_s=alpha_s,
                                alpha_l=alpha_l, w_s=w_s, w_l=w_l,
-                               interpret=interpret)
+                               interpret=interpret_mode())

@@ -45,10 +45,19 @@ class SimResult:
     wasteful: int
     hot_recall: float            # mean fraction of oracle top-k held fast
     fast_hit_frac: float         # fraction of accesses served by fast tier
-    timeline_slow_bw: np.ndarray
-    timeline_fast_hits: np.ndarray
-    timeline_mode: np.ndarray    # ARMS mode per interval (0 elsewhere)
-    timeline_promotions: np.ndarray
+    # [T] per-interval series; None under the scan engine's streaming
+    # reduction (reduce="stream"), which folds them into the summaries
+    # below instead of materializing anything [T]-shaped.
+    timeline_slow_bw: np.ndarray | None = None
+    timeline_fast_hits: np.ndarray | None = None
+    timeline_mode: np.ndarray | None = None  # ARMS mode (0 elsewhere)
+    timeline_promotions: np.ndarray | None = None
+    # streaming summaries (None under reduce="stack"; derive them from the
+    # timelines there instead).
+    mean_slow_bw: float | None = None
+    mean_fast_hits: float | None = None
+    mean_mode: float | None = None
+    max_promotions_interval: int | None = None
 
     def row(self) -> dict:
         return dict(name=self.name, exec_time_s=round(self.exec_time_s, 4),

@@ -138,7 +138,9 @@ def _resolve_workloads(workloads, T):
 
 def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
           seeds=(0,), k: int, T: int | None = None, n: int | None = None,
-          sim_seed: int = 0, wl_seed: int = 0, sample_u=None) -> SweepResult:
+          sim_seed: int = 0, wl_seed: int = 0, sample_u=None,
+          timelines: bool = False,
+          use_interval_kernel: bool = True) -> SweepResult:
     """Axis-product sweep; ONE lane-batched dispatch per policy family.
 
     ``policies``: policy names and/or PolicySpec instances (a tuning grid
@@ -150,7 +152,16 @@ def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
     padding unifies them in one dispatch).  ``seeds``: one entry keeps
     all lanes CRN-paired (noise from ``sim_seed``); several entries give
     each seed lane its own PRNG noise stream.
+
+    Per-interval outputs STREAM by default: timelines fold into running
+    sums/extrema inside the scan carry (``SimResult.mean_*`` /
+    ``max_promotions_interval``), so a wide sweep's output memory is
+    O(lanes), independent of T.  Pass ``timelines=True`` to opt back into
+    stacked [T] ``timeline_*`` series.  Scalar results are identical
+    either way.  ``use_interval_kernel=False`` pins the historical
+    unfused interval path (equivalence tests / kernel benchmark only).
     """
+    reduce = "stack" if timelines else "stream"
     policies = [policies] if not isinstance(policies, (list, tuple)) \
         else list(policies)
     pol_specs = [policy_spec(p) for p in policies]
@@ -230,17 +241,20 @@ def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
                 jnp.stack([jax.random.PRNGKey(wl_seed)] * W),
                 sampling,
                 scan_engine._synth_need_normal(wl_specs, min_period),
-                Pg * M * S, n, wl_boost=wl_boost)
+                Pg * M * S, n, wl_boost=wl_boost,
+                interval_kernel=use_interval_kernel, reduce=reduce)
         else:
             out = scan_engine._sim_jit(
                 spec_l, jnp.asarray(trace, jnp.float32),
                 jnp.asarray(oracle), k, mach_l, caps_l, keys, sample,
-                sampling, scan_engine._need_normal(trace, min_period))
+                sampling, scan_engine._need_normal(trace, min_period),
+                interval_kernel=use_interval_kernel, reduce=reduce)
         out = scan_engine._timelines_lane_major(out)
         scan_engine._record_dispatch(
             lanes=L, sampling=sampling, policy=pol_specs[idxs[0]].name,
             synth=synth, workloads=W, configs=Pg, machines=M, seeds=S,
-            axis_product=True)
+            axis_product=True, interval_kernel=use_interval_kernel,
+            reduce=reduce)
         for l in range(L):
             w = l // (Pg * M * S)
             p = idxs[p_local[l]]

@@ -63,6 +63,7 @@ signatures in lockstep.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +71,7 @@ import numpy as np
 
 from repro.baselines.arms_policy import SWEEPABLE, ARMSSpec
 from repro.core.state import ARMSConfig
+from repro.kernels.interval_step import ops as interval_ops
 from repro.simulator import machine_spec, machines, simjax, workload_spec
 from repro.simulator.engine import SimResult, oracle_topk_masks
 from repro.simulator.sampling import (_NORMAL_SWITCH, pebs_sample_from_uniform,
@@ -172,7 +174,8 @@ def _init_carry(spec, B: int, n: int, k: int, mach, keys):
 def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
               sampling: str, need_normal: bool, wl=None, wl_keys=None,
               noise_key=None, wl_rep: int = 1, n: int | None = None,
-              wl_boost: bool = True):
+              wl_boost: bool = True, interval_kernel: bool = True,
+              reduce: str = "stack"):
     """Traceable batched replay; returns a dict of [B] scalars + timelines.
 
     Lanes (= sweep entries) form the leading axis of every carried array,
@@ -203,7 +206,23 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
       * "pre":  ``sample`` is a [T, P, n] stack of precomputed observation
         grids (one per period in the family's ``PRE_PERIODS``); lanes only
         select by ``spec.obs_index(state)``.
+
+    ``interval_kernel`` (static) routes the interval hot path through the
+    fused ``kernels/interval_step`` ops — threshold-select oracle masks
+    instead of full ``lax.top_k`` + scatter, migrations + wasteful
+    accounting hoisted inside the any-lane fire cond (bitwise a no-op on
+    non-fire intervals, so the hop-chain gather/scatter work is genuinely
+    skipped), and single-call fused accounting + recall.  Every route is
+    bitwise-equal to the unfused path under CRN (tests/test_interval_step).
+
+    ``reduce`` (static) selects the per-interval output layout:
+      * "stack":  timelines stacked into [T, B] ys (historical layout);
+      * "stream": timelines folded into running sums/extrema inside the
+        scan carry — the scan emits NO ys, so per-lane output memory is
+        O(n), not O(T).  The result dict then carries ``mean_*`` /
+        ``max_promotions_interval`` summaries and no ``timeline_*`` keys.
     """
+    assert reduce in ("stack", "stream")
     if wl is None:
         T, n = trace.shape
     else:
@@ -263,7 +282,8 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
             workt = jax.vmap(wl_cls.work_of, in_axes=(0, 0, None))(
                 wl, wst, tw)                                     # [W]
             true_w = workt[:, None] * probs
-            orc_w = jax.vmap(lambda x: _topk_mask(x, k))(true_w)
+            orc_w = (interval_ops.topk_mask(true_w, k) if interval_kernel
+                     else jax.vmap(lambda x: _topk_mask(x, k))(true_w))
             true_b = jnp.repeat(true_w, wl_rep, axis=0)          # [B, n]
             orc_b = jnp.repeat(orc_w, wl_rep, axis=0)
         state = c["state"]
@@ -274,7 +294,9 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
         state = vobserve(spec, state, observed)
         do = vfires(spec, state)                                # [B]
 
-        def fire(st):
+        R = caps.shape[-1]
+
+        def plan(st):
             new_state, promote, demote = vpolicy(
                 spec, st, c["slow_bw"], c["app_bw"], k)
             # lanes whose policy is not due keep their state; their padded
@@ -284,34 +306,74 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
             demote = jnp.where(do[:, None], demote, -1)
             return st, promote, demote
 
-        def skip(st):
-            return (st, jnp.full((B, pad_p), -1, jnp.int32),
-                    jnp.full((B, pad_d), -1, jnp.int32))
+        if interval_kernel:
+            # Fused route: migrations + wasteful accounting ride INSIDE the
+            # any-lane fire cond.  On non-fire intervals the unfused path
+            # executes them against all-(-1) plans — a bitwise no-op — so
+            # skipping them entirely preserves CRN equivalence while
+            # dropping the hop-chain gather/scatter from most intervals.
+            def fire(op):
+                st, tier0, p_at0, d_at0 = op
+                st, promote, demote = plan(st)
+                tier, pexec, dexec, mig_up, mig_down = \
+                    interval_ops.tier_migrate(tier0, promote, demote, caps)
+                waste, p_at, d_at = jax.vmap(
+                    simjax.wasteful_update,
+                    in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                    t - 1, p_at0, d_at0, promote, demote, pexec, dexec)
+                return (st, tier, p_at, d_at,
+                        pexec.sum(axis=1).astype(jnp.int32),
+                        dexec.sum(axis=1).astype(jnp.int32), waste,
+                        mig_up, mig_down)
 
-        # Scalar predicate: the policy pass (top-k / sort ranking dominates
-        # its cost) only runs on intervals where at least one lane's cadence
-        # is due — unlike an outer vmap-of-cond, which would select-execute
-        # it every interval.
-        state, promote, demote = jax.lax.cond(jnp.any(do), fire, skip, state)
+            def skip(op):
+                st, tier0, p_at0, d_at0 = op
+                z = jnp.zeros((B,), jnp.int32)
+                zp = jnp.zeros((B, R - 1), jnp.int32)
+                return st, tier0, p_at0, d_at0, z, z, z, zp, zp
 
-        tier, pexec, dexec, mig_up, mig_down = jax.vmap(
-            simjax.apply_tier_migrations, in_axes=(0, 0, 0, 0))(
-            c["tier"], promote, demote, caps)
-        n_promo = pexec.sum(axis=1).astype(jnp.int32)           # [B]
-        n_demo = dexec.sum(axis=1).astype(jnp.int32)
-        waste, promoted_at, demoted_at = jax.vmap(
-            simjax.wasteful_update, in_axes=(None, 0, 0, 0, 0, 0, 0))(
-            t - 1, c["promoted_at"], c["demoted_at"], promote, demote,
-            pexec, dexec)
-        acc_fast, acc_slow, wall, slow_share, app_raw = jax.vmap(
-            simjax.interval_accounting_impl)(
-            mach, true_b, tier, mig_up.astype(f32), mig_down.astype(f32))
+            (state, tier, promoted_at, demoted_at, n_promo, n_demo, waste,
+             mig_up, mig_down) = jax.lax.cond(
+                jnp.any(do), fire, skip,
+                (state, c["tier"], c["promoted_at"], c["demoted_at"]))
+            acc_fast, acc_slow, wall, slow_share, app_raw, recall = \
+                interval_ops.interval_account(
+                    mach, true_b, tier, mig_up.astype(f32),
+                    mig_down.astype(f32), orc_b, k)
+        else:
+            def fire(st):
+                return plan(st)
+
+            def skip(st):
+                return (st, jnp.full((B, pad_p), -1, jnp.int32),
+                        jnp.full((B, pad_d), -1, jnp.int32))
+
+            # Scalar predicate: the policy pass (top-k / sort ranking
+            # dominates its cost) only runs on intervals where at least one
+            # lane's cadence is due — unlike an outer vmap-of-cond, which
+            # would select-execute it every interval.
+            state, promote, demote = jax.lax.cond(jnp.any(do), fire, skip,
+                                                  state)
+
+            tier, pexec, dexec, mig_up, mig_down = jax.vmap(
+                simjax.apply_tier_migrations, in_axes=(0, 0, 0, 0))(
+                c["tier"], promote, demote, caps)
+            n_promo = pexec.sum(axis=1).astype(jnp.int32)       # [B]
+            n_demo = dexec.sum(axis=1).astype(jnp.int32)
+            waste, promoted_at, demoted_at = jax.vmap(
+                simjax.wasteful_update, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                t - 1, c["promoted_at"], c["demoted_at"], promote, demote,
+                pexec, dexec)
+            acc_fast, acc_slow, wall, slow_share, app_raw = jax.vmap(
+                simjax.interval_accounting_impl)(
+                mach, true_b, tier, mig_up.astype(f32),
+                mig_down.astype(f32))
+            recall = ((tier == 0) & orc_b).sum(axis=1).astype(f32) / k
         if cls.slow_access_extra_ns:
             # policy-mechanism overhead charged to the application (TPP's
             # NUMA hint faults are taken on slow-tier accesses).
             wall = wall + acc_slow * f32(cls.slow_access_extra_ns) \
                 * f32(1e-9) / mach.mlp
-        recall = ((tier == 0) & orc_b).sum(axis=1).astype(f32) / k
 
         new_c = dict(
             state=state, tier=tier,
@@ -331,12 +393,26 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
             recall_sum=c["recall_sum"] + recall)
         if wl is not None:
             new_c["wl_state"] = wst
-        ys = dict(slow=slow_share,
-                  hits=acc_fast / jnp.maximum(acc_fast + acc_slow, 1e-9),
-                  mode=vmode(spec, state), promos=n_promo)
+        hits_val = acc_fast / jnp.maximum(acc_fast + acc_slow, 1e-9)
+        if reduce == "stream":
+            # per-interval outputs folded into the carry: the scan emits no
+            # ys, so nothing [T, ...]-shaped is ever allocated.
+            new_c["slow_sum"] = c["slow_sum"] + slow_share
+            new_c["hits_sum"] = c["hits_sum"] + hits_val
+            new_c["mode_sum"] = c["mode_sum"] + vmode(spec, state)
+            new_c["promos_max"] = jnp.maximum(c["promos_max"], n_promo)
+            ys = {}
+        else:
+            ys = dict(slow=slow_share, hits=hits_val,
+                      mode=vmode(spec, state), promos=n_promo)
         return new_c, ys
 
     carry = _init_carry(spec, B, n, k, mach, keys)
+    if reduce == "stream":
+        carry["slow_sum"] = jnp.zeros((B,), f32)
+        carry["hits_sum"] = jnp.zeros((B,), f32)
+        carry["mode_sum"] = jnp.zeros((B,), jnp.int32)
+        carry["promos_max"] = jnp.zeros((B,), jnp.int32)
     if wl is None:
         trace = jnp.asarray(trace, f32)
         xs = (trace, jnp.asarray(oracle_mask, bool), sample)
@@ -345,22 +421,43 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
             wl, n, wl_keys)
         xs = sample
     carry, ys = jax.lax.scan(step, carry, xs)
-    return dict(
+    out = dict(
         exec_time=carry["exec_time"], promotions=carry["promotions"],
         demotions=carry["demotions"], wasteful=carry["wasteful"],
         hot_recall=carry["recall_sum"] / T,
         fast_hit_frac=carry["acc_fast_total"]
-        / jnp.maximum(carry["acc_total"], 1e-9),
-        timeline_slow_bw=ys["slow"], timeline_fast_hits=ys["hits"],
-        timeline_mode=ys["mode"], timeline_promotions=ys["promos"])
+        / jnp.maximum(carry["acc_total"], 1e-9))
+    if reduce == "stream":
+        out.update(
+            mean_slow_bw=carry["slow_sum"] / T,
+            mean_fast_hits=carry["hits_sum"] / T,
+            mean_mode=carry["mode_sum"].astype(f32) / T,
+            max_promotions_interval=carry["promos_max"])
+    else:
+        out.update(
+            timeline_slow_bw=ys["slow"], timeline_fast_hits=ys["hits"],
+            timeline_mode=ys["mode"], timeline_promotions=ys["promos"])
+    return out
 
 
+#: Donation lists: every donated position is (re)built fresh at each call
+#: site — spec / mach / caps lane stacks and PRNG key stacks — so XLA can
+#: reuse their buffers for outputs.  trace / oracle / sample are NEVER
+#: donated: callers hold and reuse them across dispatches (CRN pairing).
+#: Donation is best-effort by shape: [B]-shaped spec leaves alias the [B]
+#: result scalars; the machine's small [B, R] rows have no same-shaped
+#: output, which XLA reports per dispatch — silence just that notice.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 @functools.partial(
-    jax.jit, static_argnames=("k", "sampling", "need_normal"))
+    jax.jit, static_argnames=("k", "sampling", "need_normal",
+                              "interval_kernel", "reduce"),
+    donate_argnums=(0, 4, 5, 6))
 def _sim_jit(spec, trace, oracle_mask, k, mach, caps, keys, sample,
-             sampling, need_normal):
+             sampling, need_normal, interval_kernel=True, reduce="stack"):
     return _simulate(spec, trace, oracle_mask, k, mach, caps, keys, sample,
-                     sampling, need_normal)
+                     sampling, need_normal, interval_kernel=interval_kernel,
+                     reduce=reduce)
 
 
 def _precompute_observations(trace, u, periods: tuple, need_normal: bool):
@@ -379,24 +476,33 @@ def _precompute_observations(trace, u, periods: tuple, need_normal: bool):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "periods", "need_normal"))
+    jax.jit, static_argnames=("k", "periods", "need_normal",
+                              "interval_kernel", "reduce"),
+    donate_argnums=(0, 4, 5, 6))
 def _sim_pre_jit(spec, trace, oracle_mask, k, mach, caps, keys, u, periods,
-                 need_normal):
+                 need_normal, interval_kernel=True, reduce="stack"):
     obs = _precompute_observations(trace, u, periods, need_normal)
     return _simulate(spec, trace, oracle_mask, k, mach, caps, keys, obs,
-                     "pre", need_normal)
+                     "pre", need_normal, interval_kernel=interval_kernel,
+                     reduce=reduce)
 
 
 @functools.partial(
     jax.jit, static_argnames=("k", "sampling", "need_normal",
-                              "wl_rep", "n", "wl_boost"))
+                              "wl_rep", "n", "wl_boost",
+                              "interval_kernel", "reduce"),
+    donate_argnums=(0, 3, 4, 5, 7, 8))
 def _sim_synth_jit(spec, wl, k, mach, caps, keys, sample, noise_key,
                    wl_keys, sampling, need_normal, wl_rep, n,
-                   wl_boost=True):
+                   wl_boost=True, interval_kernel=True, reduce="stack"):
+    # NB: ``wl`` (position 1) and ``sample`` (6) are NOT donated —
+    # experiment.sweep shares one workload stack / CRN field across every
+    # per-family dispatch of a single axis-product call.
     return _simulate(spec, None, None, k, mach, caps, keys, sample,
                      sampling, need_normal, wl=wl, wl_keys=wl_keys,
                      noise_key=noise_key, wl_rep=wl_rep, n=n,
-                     wl_boost=wl_boost)
+                     wl_boost=wl_boost, interval_kernel=interval_kernel,
+                     reduce=reduce)
 
 
 def _synth_need_normal(wl_specs, min_period: float) -> bool:
@@ -410,20 +516,28 @@ def _synth_need_normal(wl_specs, min_period: float) -> bool:
 
 def _to_result(out, lane: int, name: str) -> SimResult:
     lane_out = jax.tree_util.tree_map(lambda x: x[lane], out)
-    ts = {k: np.asarray(v) for k, v in lane_out.items()
-          if k.startswith("timeline_")}
-    return SimResult(
+    res = SimResult(
         name=name,
         exec_time_s=float(lane_out["exec_time"]),
         promotions=int(lane_out["promotions"]),
         demotions=int(lane_out["demotions"]),
         wasteful=int(lane_out["wasteful"]),
         hot_recall=float(lane_out["hot_recall"]),
-        fast_hit_frac=float(lane_out["fast_hit_frac"]),
-        timeline_slow_bw=ts["timeline_slow_bw"].astype(np.float64),
-        timeline_fast_hits=ts["timeline_fast_hits"].astype(np.float64),
-        timeline_mode=ts["timeline_mode"].astype(np.int32),
-        timeline_promotions=ts["timeline_promotions"].astype(np.int32))
+        fast_hit_frac=float(lane_out["fast_hit_frac"]))
+    if "timeline_slow_bw" in lane_out:       # reduce="stack"
+        ts = {k: np.asarray(v) for k, v in lane_out.items()
+              if k.startswith("timeline_")}
+        res.timeline_slow_bw = ts["timeline_slow_bw"].astype(np.float64)
+        res.timeline_fast_hits = ts["timeline_fast_hits"].astype(np.float64)
+        res.timeline_mode = ts["timeline_mode"].astype(np.int32)
+        res.timeline_promotions = ts["timeline_promotions"].astype(np.int32)
+    else:                                    # reduce="stream" summaries
+        res.mean_slow_bw = float(lane_out["mean_slow_bw"])
+        res.mean_fast_hits = float(lane_out["mean_fast_hits"])
+        res.mean_mode = float(lane_out["mean_mode"])
+        res.max_promotions_interval = int(
+            lane_out["max_promotions_interval"])
+    return res
 
 
 def _timelines_lane_major(out):
@@ -441,7 +555,8 @@ def _record_dispatch(**info):
 
 # ------------------------------------------------------------- public API
 def simulate(spec, trace, machine, k: int, seed: int = 0, sample_u=None,
-             name: str | None = None) -> SimResult:
+             name: str | None = None,
+             use_interval_kernel: bool = True) -> SimResult:
     """Device-resident replay of ``trace`` under any policy spec.
 
     ``machine``: registry name / MachineSpec / TieredMachineSpec.
@@ -449,6 +564,9 @@ def simulate(spec, trace, machine, k: int, seed: int = 0, sample_u=None,
     path (pass the same field to ``engine.run(..., sample_u=...)`` for an
     exactly-comparable reference run).  Default: PEBS noise drawn with
     ``jax.random`` from a key threaded through the scan carry.
+    ``use_interval_kernel=False`` pins the historical unfused interval
+    path — the fused route is bitwise-equal, so this only matters for
+    equivalence tests and the kernel benchmark.
     """
     trace = np.asarray(trace)
     assert 0 < k <= trace.shape[1]
@@ -461,9 +579,11 @@ def simulate(spec, trace, machine, k: int, seed: int = 0, sample_u=None,
     out = _sim_jit(_lane_specs(spec, 1), jnp.asarray(trace, jnp.float32),
                    jnp.asarray(oracle), k, mach, caps, keys, sample,
                    "crn" if crn else "prng",
-                   _need_normal(trace, spec.min_sampling_period()))
+                   _need_normal(trace, spec.min_sampling_period()),
+                   interval_kernel=use_interval_kernel)
     _record_dispatch(lanes=1, sampling="crn" if crn else "prng",
-                     policy=spec.name, machines=1)
+                     policy=spec.name, machines=1,
+                     interval_kernel=use_interval_kernel, reduce="stack")
     return _to_result(_timelines_lane_major(out), 0, name or spec.name)
 
 
@@ -493,7 +613,7 @@ def sweep_seeds(trace, machine, k: int, seeds, cfg: ARMSConfig | None = None,
                    jnp.zeros((trace.shape[0], 1), jnp.float32), "prng",
                    _need_normal(trace, spec.min_sampling_period()))
     _record_dispatch(lanes=len(seeds), sampling="prng", policy=spec.name,
-                     machines=1)
+                     machines=1, interval_kernel=True, reduce="stack")
     out = _timelines_lane_major(out)
     return [_to_result(out, i, f"{spec.name}[seed={s}]")
             for i, s in enumerate(seeds)]
@@ -532,7 +652,8 @@ def sweep_policy_configs(spec_family, trace, machine, k: int, configs,
                    jnp.asarray(sample_u, jnp.float32), "crn",
                    _need_normal(trace, min_period))
     _record_dispatch(lanes=len(configs), sampling="crn",
-                     policy=specs[0].name, machines=1)
+                     policy=specs[0].name, machines=1,
+                     interval_kernel=True, reduce="stack")
     out = _timelines_lane_major(out)
     labels = [",".join(f"{nm}={v:.6g}" for nm, v in sorted(cfg.items()))
               for cfg in configs]
@@ -583,7 +704,8 @@ def sweep_arms_configs(trace, machine, k: int, overrides: dict,
                        jnp.asarray(oracle), k, mach, caps, keys,
                        jnp.asarray(sample_u, jnp.float32),
                        ARMSSpec.PRE_PERIODS, need_normal)
-    _record_dispatch(lanes=B, sampling="pre", policy="arms", machines=1)
+    _record_dispatch(lanes=B, sampling="pre", policy="arms", machines=1,
+                     interval_kernel=True, reduce="stack")
     out = _timelines_lane_major(out)
     labels = [",".join(f"{nm}={float(overrides[nm][b]):.4g}" for nm in names)
               for b in range(B)]
@@ -594,7 +716,8 @@ def sweep_arms_configs(trace, machine, k: int, overrides: dict,
 # --------------------------------------------- trace synthesis (workloads)
 def simulate_workload(spec, workload, machine, k: int, T: int, n: int,
                       sim_seed: int = 0, wl_seed: int = 0, sample_u=None,
-                      name: str | None = None) -> SimResult:
+                      name: str | None = None,
+                      use_interval_kernel: bool = True) -> SimResult:
     """Device-synthesized replay of a ``WorkloadSpec`` under any policy.
 
     The scan engine synthesizes ``true = work * probs`` per interval from
@@ -619,10 +742,12 @@ def simulate_workload(spec, workload, machine, k: int, T: int, n: int,
         jax.random.PRNGKey(0)[None], sample, jax.random.PRNGKey(sim_seed),
         jax.random.PRNGKey(wl_seed)[None], "crn" if crn else "crn_prng",
         _synth_need_normal([workload], spec.min_sampling_period()), 1, n,
-        wl_boost=workload.has_boost())
+        wl_boost=workload.has_boost(),
+        interval_kernel=use_interval_kernel)
     _record_dispatch(lanes=1, sampling="crn" if crn else "crn_prng",
                      policy=spec.name, synth=True, workloads=1, configs=1,
-                     machines=1)
+                     machines=1, interval_kernel=use_interval_kernel,
+                     reduce="stack")
     label = name or f"{spec.name}@{workload_spec.label_of(workload)}"
     return _to_result(_timelines_lane_major(out), 0, label)
 
@@ -658,7 +783,8 @@ def sweep_workloads(workloads, machine, k: int, T: int, n: int,
         _synth_need_normal(workloads, spec.min_sampling_period()), 1, n,
         wl_boost=any(w.has_boost() for w in workloads))
     _record_dispatch(lanes=W, sampling="crn_prng", policy=spec.name,
-                     synth=True, workloads=W, configs=1, machines=1)
+                     synth=True, workloads=W, configs=1, machines=1,
+                     interval_kernel=True, reduce="stack")
     out = _timelines_lane_major(out)
     return [_to_result(out, i, f"{spec.name}@{nm}")
             for i, nm in enumerate(names)]
@@ -706,7 +832,8 @@ def sweep_workload_configs(spec_family, configs, workloads, machine, k: int,
         wl_boost=any(w.has_boost() for w in workloads))
     _record_dispatch(lanes=W * B, sampling="crn" if crn else "crn_prng",
                      policy=pol_specs[0].name, synth=True, workloads=W,
-                     configs=B, machines=1)
+                     configs=B, machines=1, interval_kernel=True,
+                     reduce="stack")
     out = _timelines_lane_major(out)
     labels = [",".join(f"{nm}={v:.6g}" for nm, v in sorted(cfg.items()))
               for cfg in configs]

@@ -113,7 +113,9 @@ def tune(family: str, trace, machine, k, budget: int = 24,
     ``{workload_name: (best_config, best_result, rows)}``.
 
     Both modes are thin views over ``experiment.sweep``: the config grid
-    rides the policy axis of the axis-product API.
+    rides the policy axis of the axis-product API.  They inherit the
+    sweep's streaming reduction — rows carry scalar summaries, not
+    ``timeline_*`` arrays — so tuning memory is O(lanes) regardless of T.
     """
     if family not in FAMILIES:
         raise ValueError(f"unknown family {family!r}; "

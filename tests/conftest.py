@@ -1,0 +1,14 @@
+import warnings
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _quiet_donation_notice():
+    """jit buffer donation is best-effort by shape; XLA's per-dispatch
+    notice about the small machine-spec rows it could not alias is
+    expected (see scan_engine) and would drown real warnings here."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
