@@ -1,0 +1,183 @@
+"""Adaptive search engine: compute-vs-quality curves per strategy + the
+machine-transfer robustness matrix, into BENCH_search.json.
+
+For each family x workload, runs the three strategies of
+``simulator/search.py`` under the same budget / seeds and records the
+comparison the subsystem was built to make: best-found ``exec_time_s``
+against TOTAL LANE-INTERVALS SPENT (sum over rounds of dispatch lanes x
+horizon — the strategy-agnostic compute unit).  The headline numbers are
+``asha.gap`` (best-found vs the exhaustive grid's best, same seeded
+population) and ``asha.li_frac`` (lane-intervals vs the grid's
+``budget * T``): the ISSUE-7 acceptance band is gap <= 3% at <= 40%.
+
+The transfer section reruns the companion tuning paper's robustness
+experiment ("tuned on machine A, deployed on B"): one machine-lane search
+per family, then one cross-evaluation sweep, reported as the A->B
+slowdown-vs-native matrix.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/bench_search.py \
+      [--T 300] [--n 2048] [--budget 16] [--quick] [--out BENCH_search.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks import common
+from repro.simulator import search, workloads
+
+FAMILIES = ["hemem", "memtis", "tpp", "arms"]
+WL_SET = ["gups", "silo-tpcc", "xsbench"]
+MACH_SET = ["pmem-large", "numa", "cxl-1hop", "dram-cxl-pmem"]
+
+
+def strategy_record(family: str, trace, k: int, budget: int,
+                    search_seed: int = 0, sim_seed: int = 0) -> dict:
+    """Run grid/asha/ce for one family on one trace -> comparison record.
+
+    All three strategies share ``search_seed`` (grid and ASHA score the
+    SAME seeded population; CE redraws from it) and ``sim_seed`` (every
+    dispatch's lanes share the CRN noise field), so best-found deltas are
+    attributable to the search loop alone.
+    """
+    rec = {}
+    for strategy in ("grid", "asha", "ce"):
+        t0 = time.time()
+        sr = search.run(family, strategy, trace=trace, k=k, budget=budget,
+                        search_seed=search_seed, sim_seed=sim_seed)
+        wall = time.time() - t0
+        rec[strategy] = dict(
+            best_exec_time_s=round(float(sr.best_result.exec_time_s), 6),
+            best_config={nm: round(float(v), 6)
+                         for nm, v in sr.best_config.items()},
+            rounds=len(sr.rounds),
+            dispatches=sr.dispatches,
+            lane_intervals=sr.lane_intervals,
+            wall_s=round(wall, 3),
+            curve=[[int(li), round(float(t), 6)] for li, t in sr.curve()],
+        )
+        if strategy == "asha":
+            # rungs where the ranking was fully tied (zero information:
+            # ASHA refuses to eliminate and carries the population — the
+            # lane-interval fraction is only meaningful when this is 0).
+            rec[strategy]["zero_info_rungs"] = sum(
+                1 for r in sr.rounds[:-1]
+                if r.survivors == r.population)
+    grid = rec["grid"]
+    for strategy in ("asha", "ce"):
+        s = rec[strategy]
+        s["gap_vs_grid"] = round(
+            s["best_exec_time_s"] / grid["best_exec_time_s"] - 1.0, 4)
+        s["li_frac_of_grid"] = round(
+            s["lane_intervals"] / grid["lane_intervals"], 4)
+    return rec
+
+
+def transfer_record(family: str, trace, k: int, budget: int,
+                    machines=MACH_SET, strategy: str = "asha") -> dict:
+    """Machine-transfer matrix for one family: tune per machine (one
+    machine-lane search), cross-evaluate in one final sweep."""
+    t0 = time.time()
+    tm = search.transfer_matrix(family, trace, list(machines), k,
+                                budget=budget, strategy=strategy)
+    wall = time.time() - t0
+    worst = max(float(tm.slowdown[a, b])
+                for a in range(len(tm.machines))
+                for b in range(len(tm.machines)) if a != b)
+    return dict(strategy=strategy, machines=tm.machines,
+                wall_s=round(wall, 3),
+                worst_foreign_slowdown=round(worst, 4),
+                rows=tm.rows())
+
+
+def collect(T: int, n: int, k: int, budget: int) -> dict:
+    rec: dict = dict(T=T, n_pages=n, k=k, budget=budget,
+                     strategies=dict(), transfer=dict())
+    for wl in WL_SET:
+        trace = workloads.make(wl, T=T, n=n)
+        for family in FAMILIES:
+            r = strategy_record(family, trace, k, budget)
+            rec["strategies"][f"{family}.{wl}"] = r
+            print(f"[bench_search] {family}.{wl}: grid "
+                  f"{r['grid']['best_exec_time_s']}s | asha gap "
+                  f"{r['asha']['gap_vs_grid']:+.2%} at "
+                  f"{r['asha']['li_frac_of_grid']:.1%} lane-intervals | "
+                  f"ce gap {r['ce']['gap_vs_grid']:+.2%} at "
+                  f"{r['ce']['li_frac_of_grid']:.1%}", flush=True)
+    trace = workloads.make("silo-tpcc", T=T, n=n)
+    for family in ("hemem", "arms"):
+        rec["transfer"][family] = transfer_record(family, trace, k, budget)
+        print(f"[bench_search] transfer.{family}: worst foreign slowdown "
+              f"{rec['transfer'][family]['worst_foreign_slowdown']}x "
+              f"over {len(MACH_SET)} machines", flush=True)
+    pairs = [f"{f}.{w}" for f in ("hemem", "memtis", "tpp")
+             for w in WL_SET]
+    gaps = {p: rec["strategies"][p]["asha"]["gap_vs_grid"] for p in pairs}
+    fracs = {p: rec["strategies"][p]["asha"]["li_frac_of_grid"]
+             for p in pairs}
+    # pairs with a zero-information rung degrade toward exhaustive
+    # scoring BY DESIGN (tie-aware ASHA refuses to eliminate on bitwise
+    # ties) — they still find the grid best, but the <= 40% lane-interval
+    # claim only applies where the rungs carry signal.
+    degenerate = [p for p in pairs
+                  if rec["strategies"][p]["asha"]["zero_info_rungs"] > 0]
+    informative = [p for p in pairs if p not in degenerate]
+    rec["asha_summary"] = dict(
+        max_gap_vs_grid=round(max(gaps.values()), 4),
+        informative_pairs=len(informative),
+        max_li_frac_informative=round(
+            max(fracs[p] for p in informative), 4),
+        degenerate_pairs={p: dict(gap=gaps[p], li_frac=fracs[p])
+                          for p in degenerate},
+        acceptance="gap <= 0.03 everywhere; li_frac <= 0.40 on "
+                   "signal-carrying pairs (ISSUE 7)",
+        ok=max(gaps.values()) <= 0.03
+        and max(fracs[p] for p in informative) <= 0.40)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_search.json")
+    ap.add_argument("--T", type=int, default=common.T)
+    ap.add_argument("--n", type=int, default=common.N_PAGES)
+    ap.add_argument("--budget", type=int, default=16)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny scale smoke run (T=120, n=512)")
+    args = ap.parse_args()
+    T, n = (120, 512) if args.quick else (args.T, args.n)
+
+    rec = collect(T, n, n // 8, args.budget)
+    out = dict(
+        description="Adaptive search (ASHA / cross-entropy) vs exhaustive "
+                    "grid on the same seeded population + CRN field; "
+                    "curves are [cumulative lane-intervals, best "
+                    "exec_time_s at that round's horizon]",
+        machine="CI container CPU (2 cores)",
+        notes=[
+            "ASHA rounds run at horizons T*eta**(r-R) (min t_min); "
+            "non-final curve points are short-horizon scores.",
+            "transfer.slowdown[a][b] = exec(tuned-on-a, deployed-on-b) / "
+            "exec(tuned-on-b, on-b); diagonal 1.0 by construction.",
+        ],
+        **rec,
+    )
+    # keep the CI gate's record (paper_tables.bench_search_gate merges
+    # itself under "gate") across manual full-scale reruns.
+    try:
+        with open(args.out) as f:
+            prev = json.load(f)
+        if "gate" in prev:
+            out["gate"] = prev["gate"]
+    except (OSError, ValueError):
+        pass
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(json.dumps(out["asha_summary"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

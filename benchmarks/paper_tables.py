@@ -310,6 +310,131 @@ def bench_kernel_gate():
         f.write("\n")
 
 
+# ------------------- CI gate: adaptive search rounds must stay compiled
+def bench_search_gate():
+    """Quick-gate for the adaptive search engine: (a) every round of every
+    strategy — grid's single scoring pass, each ASHA elimination rung,
+    each CE redraw generation — must run as ONE compiled dispatch per
+    policy family (the engine records the dispatch-counter delta per
+    round); (b) ASHA must land within 3% of the exhaustive grid's best
+    exec time for HeMem/Memtis/TPP while spending <= 40% of the grid's
+    lane-intervals, on the same seeded population under the same CRN
+    field.  Records the compute-vs-quality curves in BENCH_search.json
+    under "gate" (benchmarks/bench_search.py writes the full-scale
+    record)."""
+    import json
+
+    from repro.simulator import search
+
+    T_, n, k, budget = 120, 256, 32, 16
+    trace = workloads.make("silo-tpcc", T=T_, n=n)
+    rec = dict(T=T_, n_pages=n, k=k, budget=budget, workload="silo-tpcc",
+               families={})
+    gaps, fracs, rounds_bad = [], [], []
+    for fam in ("hemem", "memtis", "tpp"):
+        t0 = time.time()
+        runs = {s: search.run(fam, s, trace=trace, k=k, budget=budget)
+                for s in ("grid", "asha", "ce")}
+        wall = time.time() - t0
+        g, a, c = runs["grid"], runs["asha"], runs["ce"]
+        for s, sr in runs.items():
+            rounds_bad += [f"{fam}.{s}#{r.index}" for r in sr.rounds
+                           if r.dispatches != 1]
+        gap = float(a.best_result.exec_time_s
+                    / g.best_result.exec_time_s) - 1.0
+        frac = a.lane_intervals / g.lane_intervals
+        gaps.append(gap)
+        fracs.append(frac)
+        rec["families"][fam] = dict(
+            grid_best_s=round(float(g.best_result.exec_time_s), 6),
+            asha_best_s=round(float(a.best_result.exec_time_s), 6),
+            ce_best_s=round(float(c.best_result.exec_time_s), 6),
+            asha_gap=round(gap, 4), asha_li_frac=round(frac, 4),
+            grid_lane_intervals=g.lane_intervals,
+            asha_lane_intervals=a.lane_intervals,
+            asha_rounds=len(a.rounds), ce_rounds=len(c.rounds),
+            asha_curve=[[int(li), round(float(t), 6)]
+                        for li, t in a.curve()],
+            ce_curve=[[int(li), round(float(t), 6)]
+                      for li, t in c.curve()])
+        emit(f"search_gate.{fam}", wall * 1e6,
+             f"asha_gap={gap:+.4f};li_frac={frac:.3f};"
+             f"asha_rounds={len(a.rounds)}")
+    claim("every search round is ONE compiled dispatch per family",
+          "all rounds single-dispatch" if not rounds_bad
+          else "MULTI " + ",".join(rounds_bad),
+          "grid/ASHA/CE rounds never fall back to per-config loops",
+          not rounds_bad)
+    claim("ASHA within 3% of grid best at <= 40% of grid lane-intervals",
+          f"max_gap={max(gaps):+.4f} at max_li_frac={max(fracs):.3f} "
+          f"(hemem/memtis/tpp)",
+          "gap <= 0.03, li_frac <= 0.40", max(gaps) <= 0.03
+          and max(fracs) <= 0.40)
+    # merge under "gate" so the full-scale record written by
+    # benchmarks/bench_search.py survives CI passes.
+    try:
+        with open("BENCH_search.json") as f:
+            out = json.load(f)
+    except (OSError, ValueError):
+        out = {}
+    out.setdefault("gate", {})
+    out["gate"].update(rec)
+    with open("BENCH_search.json", "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+
+
+# -------------------- machine-transfer matrix ("From Good to Great" §5)
+def bench_transfer_matrix():
+    """"Tuned on machine A, deployed on machine B" robustness matrix over
+    the machine presets — the companion tuning paper's headline
+    experiment.  Uses strategy="grid" so the matrix is EXACT: phase 2
+    re-scores every tuned config under the same CRN field phase 1 ranked
+    them with, making the native config optimal among the tuned set —
+    diagonal slowdown 1.0 and off-diagonal >= 1.0 are invariants the gate
+    asserts, and any off-diagonal > 1 is a real transfer penalty, not
+    noise.  (benchmarks/bench_search.py records the ASHA-driven matrix at
+    full scale.)"""
+    import json
+
+    from repro.simulator import search
+
+    mach_names = ["pmem-large", "numa", "cxl-1hop", "dram-cxl-pmem"]
+    T_, n, k, budget = 120, 256, 32, 8
+    trace = workloads.make("silo-tpcc", T=T_, n=n)
+    t0 = time.time()
+    tm = search.transfer_matrix("hemem", trace, mach_names, k,
+                                budget=budget, strategy="grid")
+    wall = time.time() - t0
+    M = len(tm.machines)
+    diag_ok = bool(np.allclose(np.diag(tm.slowdown), 1.0))
+    off_ok = bool((tm.slowdown >= 1.0 - 1e-12).all())
+    worst = max(float(tm.slowdown[a, b]) for a in range(M)
+                for b in range(M) if a != b)
+    for r in tm.rows():
+        emit(f"transfer_matrix.{r['tuned_on']}", wall * 1e6 / M,
+             ";".join(f"{b}={s:.4f}" for b, s in r["slowdown"].items()))
+    claim("transfer matrix spans >= 3 machine presets",
+          f"{M} machines: {tm.machines}", ">= 3 presets", M >= 3)
+    claim("native tuning optimal under shared CRN (diag 1.0, off >= 1.0)",
+          f"diag_ok={diag_ok}; min_off={float(tm.slowdown.min()):.6f}; "
+          f"worst_foreign={worst:.4f}x",
+          "exact invariant of the grid-strategy matrix", diag_ok and off_ok)
+    try:
+        with open("BENCH_search.json") as f:
+            out = json.load(f)
+    except (OSError, ValueError):
+        out = {}
+    out.setdefault("gate", {})
+    out["gate"]["transfer"] = dict(
+        family="hemem", strategy="grid", machines=tm.machines,
+        T=T_, n_pages=n, k=k, budget=budget,
+        worst_foreign_slowdown=round(worst, 4), rows=tm.rows())
+    with open("BENCH_search.json", "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+
+
 # --------------------------------- machine-sensitivity table (Fig. 11 ++)
 def bench_machine_sensitivity():
     """Best-untuned policy per machine: the paper's robustness claim taken

@@ -30,11 +30,18 @@ def main() -> None:
     # recorded in BENCH_machines.json.  The kernel gate asserts the fused
     # interval path stays bitwise-identical to the unfused scan under CRN
     # and that default sweeps stream (no [T, ...] timeline allocation) —
-    # recorded in BENCH_kernels.json.
+    # recorded in BENCH_kernels.json.  The search gate asserts every
+    # ASHA/CE round stays ONE compiled dispatch per family and that ASHA
+    # reaches within 3% of the exhaustive grid best at <= 40% of its
+    # lane-intervals; the transfer gate asserts the tuned-on-A/deployed-
+    # on-B matrix's exact grid-strategy invariants over >= 3 machine
+    # presets — both recorded in BENCH_search.json.
     pt.bench_baseline_sweep_gate()
     pt.bench_workload_sweep_gate()
     pt.bench_machine_sweep_gate()
     pt.bench_kernel_gate()
+    pt.bench_search_gate()
+    pt.bench_transfer_matrix()
     pt.bench_machine_sensitivity()
     pt.bench_main_comparison()
     pt.bench_migrations()

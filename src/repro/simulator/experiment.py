@@ -124,6 +124,13 @@ class SweepResult:
                    for a, j in zip(AXES, (p, w, m, s))}, res
 
 
+def _dedup_labels(labels):
+    """Disambiguate duplicate axis labels (``name#i``) — shared with the
+    search engine, whose grouped modes key results by these labels."""
+    dup = {nm for nm in labels if labels.count(nm) > 1}
+    return [f"{nm}#{i}" if nm in dup else nm for i, nm in enumerate(labels)]
+
+
 def _resolve_workloads(workloads, T):
     specs, names = [], []
     for i, w in enumerate(workloads):
@@ -252,7 +259,7 @@ def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
         out = scan_engine._timelines_lane_major(out)
         scan_engine._record_dispatch(
             lanes=L, sampling=sampling, policy=pol_specs[idxs[0]].name,
-            synth=synth, workloads=W, configs=Pg, machines=M, seeds=S,
+            synth=synth, workloads=W, configs=Pg, machines=M, seeds=S, T=T,
             axis_product=True, interval_kernel=use_interval_kernel,
             reduce=reduce)
         for l in range(L):
@@ -265,13 +272,8 @@ def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
             grid[((p * W + w) * M + m) * S + s] = scan_engine._to_result(
                 out, l, name)
 
-    def dedup(labels):
-        dup = {nm for nm in labels if labels.count(nm) > 1}
-        return [f"{nm}#{i}" if nm in dup else nm
-                for i, nm in enumerate(labels)]
-
-    axes = dict(policy=dedup([sp.name for sp in pol_specs]),
-                workload=dedup(wl_names),
-                machine=dedup([m.name for m in mach_specs]),
+    axes = dict(policy=_dedup_labels([sp.name for sp in pol_specs]),
+                workload=_dedup_labels(wl_names),
+                machine=_dedup_labels([m.name for m in mach_specs]),
                 seed=[str(s) for s in seeds])
     return SweepResult(axes=axes, grid=grid)

@@ -81,12 +81,17 @@ __all__ = [
     "SWEEPABLE", "simulate", "sweep_seeds", "sweep_policy_configs",
     "arms_sim", "sweep_arms_configs", "simulate_workload",
     "sweep_workloads", "sweep_workload_configs", "last_dispatch",
+    "dispatch_count",
 ]
 
 #: Info about the most recent compiled dispatch (lanes, sampling mode).
 #: The CI quick gates read this to assert tuning and machine sweeps stay
 #: lane-batched instead of silently regressing to a sequential loop.
 last_dispatch: dict = {}
+#: monotone count of compiled simulation dispatches this process has issued
+#: (every ``_record_dispatch`` call).  The search engine and the CI search
+#: gate assert single-dispatch rounds by differencing it around an eval.
+dispatch_count: int = 0
 
 
 def _need_normal(trace, min_period: float) -> bool:
@@ -549,6 +554,12 @@ def _timelines_lane_major(out):
 
 
 def _record_dispatch(**info):
+    global dispatch_count
+    dispatch_count += 1
+    if "T" in info and "lanes" in info:
+        # lanes x intervals: the dispatch's compute spend in the unit the
+        # search engine compares strategies on (SearchResult.lane_intervals).
+        info["lane_intervals"] = int(info["lanes"]) * int(info["T"])
     last_dispatch.clear()
     last_dispatch.update(info)
 
@@ -582,7 +593,7 @@ def simulate(spec, trace, machine, k: int, seed: int = 0, sample_u=None,
                    _need_normal(trace, spec.min_sampling_period()),
                    interval_kernel=use_interval_kernel)
     _record_dispatch(lanes=1, sampling="crn" if crn else "prng",
-                     policy=spec.name, machines=1,
+                     policy=spec.name, machines=1, T=trace.shape[0],
                      interval_kernel=use_interval_kernel, reduce="stack")
     return _to_result(_timelines_lane_major(out), 0, name or spec.name)
 
@@ -613,7 +624,8 @@ def sweep_seeds(trace, machine, k: int, seeds, cfg: ARMSConfig | None = None,
                    jnp.zeros((trace.shape[0], 1), jnp.float32), "prng",
                    _need_normal(trace, spec.min_sampling_period()))
     _record_dispatch(lanes=len(seeds), sampling="prng", policy=spec.name,
-                     machines=1, interval_kernel=True, reduce="stack")
+                     machines=1, T=trace.shape[0], interval_kernel=True,
+                     reduce="stack")
     out = _timelines_lane_major(out)
     return [_to_result(out, i, f"{spec.name}[seed={s}]")
             for i, s in enumerate(seeds)]
@@ -652,7 +664,7 @@ def sweep_policy_configs(spec_family, trace, machine, k: int, configs,
                    jnp.asarray(sample_u, jnp.float32), "crn",
                    _need_normal(trace, min_period))
     _record_dispatch(lanes=len(configs), sampling="crn",
-                     policy=specs[0].name, machines=1,
+                     policy=specs[0].name, machines=1, T=T,
                      interval_kernel=True, reduce="stack")
     out = _timelines_lane_major(out)
     labels = [",".join(f"{nm}={v:.6g}" for nm, v in sorted(cfg.items()))
@@ -671,7 +683,8 @@ def arms_sim(trace, machine, k: int, cfg: ARMSConfig | None = None,
 
 def sweep_arms_configs(trace, machine, k: int, overrides: dict,
                        base_cfg: ARMSConfig | None = None, seed: int = 0,
-                       sample_u=None) -> list[SimResult]:
+                       sample_u=None, reduce: str = "stack"
+                       ) -> list[SimResult]:
     """Batched ARMS runs over a grid of float knob settings.
 
     ``overrides`` maps ARMSConfig float field names to equal-length value
@@ -679,7 +692,9 @@ def sweep_arms_configs(trace, machine, k: int, overrides: dict,
     uniform noise field, which lets the per-mode observation grids
     (``ARMSSpec.PRE_PERIODS``) be computed once and broadcast across
     lanes: config lanes pay zero sampling cost, and the whole sweep is one
-    compiled ``scan``+``vmap`` program.
+    compiled ``scan``+``vmap`` program.  ``reduce="stream"`` drops the
+    ``timeline_*`` stacks for O(lanes) output (scalars are identical) —
+    the search engine's eliminate-and-redraw loops use it.
     """
     names = tuple(sorted(overrides))
     if not names:
@@ -703,9 +718,9 @@ def sweep_arms_configs(trace, machine, k: int, overrides: dict,
     out = _sim_pre_jit(spec, jnp.asarray(trace, jnp.float32),
                        jnp.asarray(oracle), k, mach, caps, keys,
                        jnp.asarray(sample_u, jnp.float32),
-                       ARMSSpec.PRE_PERIODS, need_normal)
+                       ARMSSpec.PRE_PERIODS, need_normal, reduce=reduce)
     _record_dispatch(lanes=B, sampling="pre", policy="arms", machines=1,
-                     interval_kernel=True, reduce="stack")
+                     T=T, interval_kernel=True, reduce=reduce)
     out = _timelines_lane_major(out)
     labels = [",".join(f"{nm}={float(overrides[nm][b]):.4g}" for nm in names)
               for b in range(B)]
@@ -746,7 +761,7 @@ def simulate_workload(spec, workload, machine, k: int, T: int, n: int,
         interval_kernel=use_interval_kernel)
     _record_dispatch(lanes=1, sampling="crn" if crn else "crn_prng",
                      policy=spec.name, synth=True, workloads=1, configs=1,
-                     machines=1, interval_kernel=use_interval_kernel,
+                     machines=1, T=T, interval_kernel=use_interval_kernel,
                      reduce="stack")
     label = name or f"{spec.name}@{workload_spec.label_of(workload)}"
     return _to_result(_timelines_lane_major(out), 0, label)
@@ -783,7 +798,7 @@ def sweep_workloads(workloads, machine, k: int, T: int, n: int,
         _synth_need_normal(workloads, spec.min_sampling_period()), 1, n,
         wl_boost=any(w.has_boost() for w in workloads))
     _record_dispatch(lanes=W, sampling="crn_prng", policy=spec.name,
-                     synth=True, workloads=W, configs=1, machines=1,
+                     synth=True, workloads=W, configs=1, machines=1, T=T,
                      interval_kernel=True, reduce="stack")
     out = _timelines_lane_major(out)
     return [_to_result(out, i, f"{spec.name}@{nm}")
@@ -832,7 +847,7 @@ def sweep_workload_configs(spec_family, configs, workloads, machine, k: int,
         wl_boost=any(w.has_boost() for w in workloads))
     _record_dispatch(lanes=W * B, sampling="crn" if crn else "crn_prng",
                      policy=pol_specs[0].name, synth=True, workloads=W,
-                     configs=B, machines=1, interval_kernel=True,
+                     configs=B, machines=1, T=T, interval_kernel=True,
                      reduce="stack")
     out = _timelines_lane_major(out)
     labels = [",".join(f"{nm}={v:.6g}" for nm, v in sorted(cfg.items()))

@@ -1,28 +1,32 @@
 """Tuning studies: every baseline's knobs (paper §3) + ARMS internal knobs.
 
 The paper uses SMAC/Bayesian optimization; the search spaces here are small
-enough that seeded random search with a modest budget finds the same
-best-region configurations.  ``tune_hemem``/``tune_memtis``/``tune_tpp``
-return the best-performing config per workload — the paper's "Tuned-X"
-comparators — and ``tune_arms`` is the internal-knob sensitivity study
-("From Good to Great"-style, paper §6).
+enough that seeded search with a modest budget finds the same best-region
+configurations.  ``tune_hemem``/``tune_memtis``/``tune_tpp`` return the
+best-performing config per workload — the paper's "Tuned-X" comparators —
+and ``tune_arms`` is the internal-knob sensitivity study ("From Good to
+Great"-style, paper §6).
 
-All four are thin wrappers over one ``tune`` entry point: the whole search
-budget runs as ONE compiled ``lax.scan`` simulation batched over config
-lanes (the config grid rides the policy axis of ``experiment.sweep``),
-with every lane sharing a common-random-number noise field — paired
-comparisons, so row ordering reflects the knobs alone, and identical to
-replaying each config through the numpy reference engine with the same
-field (asserted in tests).  Machines are accepted by registry name.
+All four are thin views over the compiled search engine
+(``simulator/search.py``): pick ``strategy="grid"`` (the historical
+exhaustive scoring, default), ``"asha"`` (successive halving over a
+geometric horizon ladder) or ``"ce"`` (cross-entropy redraw) — every
+search *round* runs as ONE compiled ``lax.scan`` simulation batched over
+config lanes (the population rides the policy axis of
+``experiment.sweep``), with every lane sharing a common-random-number
+noise field — paired comparisons, so row ordering and elimination reflect
+the knobs alone, and grid mode stays identical to replaying each config
+through the numpy reference engine with the same field (asserted in
+tests).  Machines are accepted by registry name.
 
-Seeding is split on purpose: ``search_seed`` drives the config-grid draw,
-``sim_seed`` the CRN workload noise.  (Earlier revisions used one ``seed``
-for both, so changing the search seed silently changed the noise the
-configs were scored under.)
+Seeding is split on purpose: ``search_seed`` drives the config-grid draw
+(and CE's redraw stream), ``sim_seed`` the CRN workload noise.  (Earlier
+revisions used one ``seed`` for both, so changing the search seed
+silently changed the noise the configs were scored under.)
 """
 from __future__ import annotations
 
-import itertools
+import math
 
 import numpy as np
 
@@ -30,7 +34,7 @@ from repro.baselines.arms_policy import ARMSSpec
 from repro.baselines.hemem import HeMemSpec
 from repro.baselines.memtis import MemtisSpec
 from repro.baselines.tpp import TPPSpec
-from repro.simulator import experiment, scan_engine
+from repro.simulator import search
 
 SPACE = dict(
     hot_threshold=[1, 2, 4, 8, 16, 32],
@@ -72,15 +76,49 @@ FAMILIES = {
 }
 
 
+def _decode_grid_index(space: dict, keys: list, sizes: list, i: int) -> dict:
+    """Mixed-radix decode of flat grid index ``i`` (last knob fastest —
+    the ``itertools.product`` C order earlier revisions materialized)."""
+    vals, rem = {}, int(i)
+    for nm, size in zip(reversed(keys), reversed(sizes)):
+        vals[nm] = space[nm][rem % size]
+        rem //= size
+    return {nm: vals[nm] for nm in keys}
+
+
 def _sample_grid(space: dict, defaults: dict, budget: int, seed: int):
-    """Seeded random draw from a knob grid (default config always tried)."""
+    """Seeded random draw from a knob grid (default config always tried).
+
+    Grid indices are sampled and mixed-radix-decoded directly — the
+    Cartesian product is never materialized, so the draw is O(budget)
+    even for the larger spaces the search engine defines.  Returns at
+    most ``budget`` configs: when the default config isn't among the
+    draws, it REPLACES the last draw instead of growing the list (earlier
+    revisions returned ``budget + 1`` configs).
+    """
     rng = np.random.default_rng(seed)
     keys = list(space)
-    grid = list(itertools.product(*(space[k] for k in keys)))
-    picks = rng.choice(len(grid), size=min(budget, len(grid)), replace=False)
-    configs = [dict(zip(keys, grid[i])) for i in picks]
+    sizes = [len(space[nm]) for nm in keys]
+    total = math.prod(sizes)
+    m = max(1, min(budget, total))
+    if total > max(4096, 4 * m):
+        # huge grid: rejection-sample unique indices, O(m) memory.
+        picks, seen = [], set()
+        while len(picks) < m:
+            i = int(rng.integers(total))
+            if i not in seen:
+                seen.add(i)
+                picks.append(i)
+    else:
+        # small grid: same draw stream as the historical rng.choice over
+        # the materialized product, so seeded grids stay bit-identical.
+        picks = [int(i) for i in rng.choice(total, size=m, replace=False)]
+    configs = [_decode_grid_index(space, keys, sizes, i) for i in picks]
+    defaults = dict(defaults)
     if defaults not in configs:
-        configs.insert(0, dict(defaults))
+        if len(configs) >= budget:
+            configs = configs[:max(0, budget - 1)]
+        configs.insert(0, defaults)
     return configs
 
 
@@ -94,92 +132,93 @@ def sample_arms_configs(budget: int, seed: int = 0):
     return _sample_grid(ARMS_SPACE, ARMS_DEFAULTS, budget, seed)
 
 
+def _legacy(sr: search.SearchResult):
+    return sr.best_config, sr.best_result, sr.rows
+
+
 def tune(family: str, trace, machine, k, budget: int = 24,
          search_seed: int = 0, sim_seed: int = 0, space: dict | None = None,
          defaults: dict | None = None, workloads=None, T: int | None = None,
-         n: int | None = None):
-    """Lane-batched random-search tuning for any policy family.
+         n: int | None = None, *, strategy: str = "grid", machines=None,
+         eta: int = 3, rounds: int | None = None, t_min: int = 16,
+         ce_rounds: int = 4, elite_frac: float = 0.25,
+         ce_smoothing: float = 0.7, base_cfg=None):
+    """Lane-batched tuning for any policy family, under any strategy.
 
     -> (best_config, best_result, all (config, result) rows sorted by exec
-    time).  ``search_seed`` draws the config grid; ``sim_seed`` seeds the
-    shared CRN noise all lanes are scored under.  ``machine`` may be a
-    registry name, a MachineSpec, or a TieredMachineSpec (machines.get).
+    time).  ``search_seed`` draws the config grid (and CE's redraws);
+    ``sim_seed`` seeds the shared CRN noise all lanes are scored under.
+    ``machine`` may be a registry name, a MachineSpec, or a
+    TieredMachineSpec (machines.get).
+
+    ``strategy`` selects the search loop (see ``simulator/search.py``):
+    ``"grid"`` scores the whole budget in one full-horizon dispatch (the
+    historical behaviour); ``"asha"`` (knobs ``eta``/``rounds``/``t_min``)
+    eliminates over a geometric horizon ladder; ``"ce"`` (knobs
+    ``ce_rounds``/``elite_frac``/``ce_smoothing``) refits a sampling
+    distribution per round.  Every round of any strategy is ONE compiled
+    dispatch per family.  For round records / dispatch counts /
+    lane-interval accounting, call ``search.run`` directly — this view
+    keeps the historical return shape.
 
     Workload-lane mode: pass ``workloads`` (a list of workload names or
     ``WorkloadSpec``s, plus ``T``/``n``; ``trace`` must then be None) to
-    score ONE config grid across W workloads in ONE compiled dispatch of
-    W x budget lanes — traces are synthesized on device, nothing [T, n]
-    is materialized, and the return value becomes a dict
+    search across W workloads with each round ONE compiled dispatch of
+    W x population lanes — traces are synthesized on device, nothing
+    [T, n] is materialized, and the return value becomes a dict
     ``{workload_name: (best_config, best_result, rows)}``.
 
-    Both modes are thin views over ``experiment.sweep``: the config grid
-    rides the policy axis of the axis-product API.  They inherit the
-    sweep's streaming reduction — rows carry scalar summaries, not
-    ``timeline_*`` arrays — so tuning memory is O(lanes) regardless of T.
+    Machine-lane mode: pass ``machines=[...]`` (registry names / specs;
+    ``machine`` is then ignored) to tune per machine — per-machine
+    elimination with each round's union population x M machines in one
+    dispatch — returning ``{machine_name: (best_config, best_result,
+    rows)}``.  ``search.transfer_matrix`` builds the cross-deployment
+    robustness table on top of this mode.
+
+    All modes inherit the sweep's streaming reduction — rows carry scalar
+    summaries, not ``timeline_*`` arrays — so tuning memory is O(lanes)
+    regardless of T.
     """
-    if family not in FAMILIES:
-        raise ValueError(f"unknown family {family!r}; "
-                         f"known: {sorted(FAMILIES)}")
-    make, fam_space, fam_defaults = FAMILIES[family]
-    configs = _sample_grid(space if space is not None else fam_space,
-                           defaults if defaults is not None else fam_defaults,
-                           budget, search_seed)
-    pol_specs = [make(**cfg) for cfg in configs]
-    if workloads is not None:
-        if trace is not None:
-            raise ValueError("pass either trace or workloads, not both")
-        if T is None or n is None:
-            raise ValueError("workload-lane tuning needs T and n")
-        res = experiment.sweep(pol_specs, workloads=list(workloads),
-                               machines=[machine], k=k, T=T, n=n,
-                               sim_seed=sim_seed)
-        # result-dict keys come straight from the sweep's workload axis
-        # (names resolved + duplicate labels disambiguated there), so the
-        # two label schemes cannot drift.
-        out = {}
-        for w, nm in enumerate(res.axes["workload"]):
-            results = [res.at(policy=b, workload=w)
-                       for b in range(len(configs))]
-            rows = sorted(zip(configs, results),
-                          key=lambda cr: cr[1].exec_time_s)
-            out[nm] = (rows[0][0], rows[0][1], rows)
-        return out
-    res = experiment.sweep(pol_specs, trace=trace, machines=[machine], k=k,
-                           sim_seed=sim_seed)
-    results = [res.at(policy=b) for b in range(len(configs))]
-    rows = sorted(zip(configs, results), key=lambda cr: cr[1].exec_time_s)
-    best_cfg, best_res = rows[0]
-    return best_cfg, best_res, rows
+    out = search.run(family, strategy, trace=trace, machine=machine,
+                     machines=machines, workloads=workloads, k=k,
+                     budget=budget, eta=eta, rounds=rounds, t_min=t_min,
+                     ce_rounds=ce_rounds, elite_frac=elite_frac,
+                     ce_smoothing=ce_smoothing, search_seed=search_seed,
+                     sim_seed=sim_seed, space=space, defaults=defaults,
+                     base_cfg=base_cfg, T=T, n=n)
+    if isinstance(out, dict):
+        return {nm: _legacy(sr) for nm, sr in out.items()}
+    return _legacy(out)
 
 
 def tune_hemem(trace, machine, k, budget: int = 24, search_seed: int = 0,
-               sim_seed: int = 0):
+               sim_seed: int = 0, strategy: str = "grid", **kw):
     """The paper's "Tuned-HeMem" comparator, as one compiled batched sweep."""
-    return tune("hemem", trace, machine, k, budget, search_seed, sim_seed)
+    return tune("hemem", trace, machine, k, budget, search_seed, sim_seed,
+                strategy=strategy, **kw)
 
 
 def tune_memtis(trace, machine, k, budget: int = 24, search_seed: int = 0,
-                sim_seed: int = 0):
-    return tune("memtis", trace, machine, k, budget, search_seed, sim_seed)
+                sim_seed: int = 0, strategy: str = "grid", **kw):
+    return tune("memtis", trace, machine, k, budget, search_seed, sim_seed,
+                strategy=strategy, **kw)
 
 
 def tune_tpp(trace, machine, k, budget: int = 24, search_seed: int = 0,
-             sim_seed: int = 0):
-    return tune("tpp", trace, machine, k, budget, search_seed, sim_seed)
+             sim_seed: int = 0, strategy: str = "grid", **kw):
+    return tune("tpp", trace, machine, k, budget, search_seed, sim_seed,
+                strategy=strategy, **kw)
 
 
 def tune_arms(trace, machine, k, budget: int = 24, search_seed: int = 0,
-              sim_seed: int = 0, base_cfg=None):
-    """Batched ARMS internal-knob sweep: one compiled scan over all configs.
+              sim_seed: int = 0, base_cfg=None, strategy: str = "grid",
+              **kw):
+    """Batched ARMS internal-knob search: one compiled scan per round.
 
-    Uses the ARMS-specialized sweep (precomputed per-mode observation
+    Routed through the unified ``tune(family="arms", ...)`` path, so
+    ASHA/CE work for ARMS knobs too; trace-mode single-machine searches
+    keep the ARMS-specialized sweep (precomputed per-mode observation
     grids) rather than the generic per-interval CRN transform.
     """
-    cfgs = sample_arms_configs(budget, search_seed)
-    overrides = {key: [c[key] for c in cfgs] for key in ARMS_SPACE}
-    results = scan_engine.sweep_arms_configs(trace, machine, k, overrides,
-                                             base_cfg=base_cfg,
-                                             seed=sim_seed)
-    rows = sorted(zip(cfgs, results), key=lambda cr: cr[1].exec_time_s)
-    best_cfg, best_res = rows[0]
-    return best_cfg, best_res, rows
+    return tune("arms", trace, machine, k, budget, search_seed, sim_seed,
+                base_cfg=base_cfg, strategy=strategy, **kw)
