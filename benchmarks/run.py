@@ -35,7 +35,10 @@ def main() -> None:
     # reaches within 3% of the exhaustive grid best at <= 40% of its
     # lane-intervals; the transfer gate asserts the tuned-on-A/deployed-
     # on-B matrix's exact grid-strategy invariants over >= 3 machine
-    # presets — both recorded in BENCH_search.json.
+    # presets — both recorded in BENCH_search.json.  The robustness gate
+    # runs the adversarial-scenario leaderboard (all eight policy
+    # families x scenarios x machines as ONE dispatch per family, ARMS
+    # worst-case slowdown bounded) — recorded in BENCH_robustness.json.
     pt.bench_baseline_sweep_gate()
     pt.bench_workload_sweep_gate()
     pt.bench_machine_sweep_gate()
@@ -43,6 +46,7 @@ def main() -> None:
     pt.bench_search_gate()
     pt.bench_transfer_matrix()
     pt.bench_machine_sensitivity()
+    pt.bench_robustness_gate()
     pt.bench_main_comparison()
     pt.bench_migrations()
     pt.bench_adaptivity()

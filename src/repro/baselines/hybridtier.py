@@ -1,0 +1,113 @@
+"""HybridTier-style baseline — lightweight frequency-based CXL tiering,
+the first policy speaking the TIER-NATIVE contract (protocol docstring).
+
+HybridTier (PAPERS.md) places pages by decayed access-frequency counters
+across the whole DRAM/CXL/far-tier chain instead of a binary hot/cold
+split: the counter ranking is partitioned against the per-tier capacity
+ladder, frequency thresholds gate entry to the fast tier (no promotion on
+a single hot sample) and sink cold pages to the bottom, and per-pair
+migration budgets back off from whichever tier of a hop is the bandwidth
+bottleneck (``scheduler.pair_budgets`` on the engine's per-tier
+utilization signal).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.protocol import (LegacyPolicyAdapter, PolicySpec,
+                                      rank_desc, rank_partition, tier_plan)
+from repro.core.scheduler import pair_budgets
+from repro.utils.pytree import pytree_dataclass
+
+DEFAULTS = dict(hot_thresh=6.0, warm_thresh=1.0, decay=0.7,
+                migration_period=4, sample_period=10_000.0)
+
+
+@pytree_dataclass
+class HybridTierState:
+    counts: jnp.ndarray    # f32 [n] decayed access-frequency counters
+    tier: jnp.ndarray      # i32 [n] residency belief over the whole chain
+    t: jnp.ndarray         # i32
+
+
+@pytree_dataclass(meta=("bs_max",))
+class HybridTierSpec(PolicySpec):
+    hot_thresh: jnp.ndarray        # min frequency to enter the fast tier
+    warm_thresh: jnp.ndarray       # below this, sink to the bottom tier
+    decay: jnp.ndarray             # per-interval counter decay in (0, 1]
+    migration_period: jnp.ndarray  # i32 intervals between passes
+    sample_period: jnp.ndarray
+    bs_max: int = 128
+
+    name = "hybridtier"
+    tier_native = True
+
+    @classmethod
+    def make(cls, hot_thresh=None, warm_thresh=None, decay=None,
+             migration_period=None, sample_period=None,
+             bs_max: int = 128) -> "HybridTierSpec":
+        pick = lambda v, key: DEFAULTS[key] if v is None else v
+        return cls(
+            hot_thresh=jnp.float32(pick(hot_thresh, "hot_thresh")),
+            warm_thresh=jnp.float32(pick(warm_thresh, "warm_thresh")),
+            decay=jnp.float32(pick(decay, "decay")),
+            migration_period=jnp.int32(
+                pick(migration_period, "migration_period")),
+            sample_period=jnp.float32(pick(sample_period, "sample_period")),
+            bs_max=bs_max)
+
+    # pad width per direction; budgets (<= bs_max per pair) cap the number
+    # of moves the plan can admit anyway.
+    def pad_promote(self, n: int, k: int) -> int:
+        return max(1, min(n, 2 * self.bs_max))
+
+    def pad_demote(self, n: int, k: int) -> int:
+        return max(1, min(n, 2 * self.bs_max))
+
+    def init(self, n_pages, k, machine):
+        R = machine.lat_ns.shape[-1]
+        return HybridTierState(
+            counts=jnp.zeros((n_pages,), jnp.float32),
+            tier=jnp.full((n_pages,), R - 1, jnp.int32),
+            t=jnp.zeros((), jnp.int32))
+
+    def sampling_period(self, state):
+        return jnp.asarray(self.sample_period, jnp.float32)
+
+    def min_sampling_period(self):
+        return float(np.min(np.asarray(self.sample_period)))
+
+    def observe(self, state, observed):
+        return state.replace(counts=state.counts * self.decay + observed,
+                             t=state.t + 1)
+
+    def fires(self, state):
+        period = jnp.maximum(self.migration_period.astype(jnp.int32), 1)
+        return (state.t % period) == 0
+
+    def tier_policy(self, state, tier_util, slow_bw, app_bw, k, caps):
+        n = state.counts.shape[0]
+        R = caps.shape[0]
+        tgt = rank_partition(rank_desc(state.counts), caps)
+        # promotion gate: only frequency-hot pages may enter the fast tier
+        # (a single hot sample is not enough — the HybridTier argument).
+        tgt = jnp.where((tgt == 0) & (state.tier > 0)
+                        & (state.counts < self.hot_thresh),
+                        state.tier, tgt)
+        # cold pages sink to the bottom regardless of rank.
+        tgt = jnp.where(state.counts < self.warm_thresh, R - 1, tgt)
+        budgets = pair_budgets(tier_util, self.bs_max)
+        pages, dst, tier = tier_plan(
+            state.counts, state.tier, tgt, caps, budgets,
+            self.pad_demote(n, k), self.pad_promote(n, k))
+        return state.replace(tier=tier), pages, dst
+
+
+class HybridTierPolicy(LegacyPolicyAdapter):
+    """HybridTier for the numpy reference engine (functional spec inside)."""
+
+    def __init__(self, hot_thresh=None, warm_thresh=None, decay=None,
+                 migration_period=None, sample_period=None):
+        super().__init__(HybridTierSpec.make(
+            hot_thresh, warm_thresh, decay, migration_period, sample_period))

@@ -1,0 +1,127 @@
+"""Jenga-style baseline — thrash-free responsive tiering (tier-native).
+
+Jenga (PAPERS.md) shows that making a tiering policy *responsive* (short
+EWMA horizon, migration pass every interval or two) collapses under phase
+flips unless it is paired with explicit thrash avoidance.  This spec
+implements both halves on the tier-native contract:
+
+  * responsiveness: per-page EWMA hotness with a fast ``alpha`` and a
+    short ``migration_period``;
+  * confirmation: a page only moves after its rank-partition target has
+    been stable for ``confirm`` consecutive passes (one noisy interval
+    cannot trigger a migration);
+  * cooldown: a page that just moved is pinned for ``cooldown`` passes —
+    the ping-pong breaker.
+
+Per-pair budgets come from ``scheduler.pair_budgets`` on the engine's
+per-tier utilization, like every tier-native policy.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.protocol import (LegacyPolicyAdapter, PolicySpec,
+                                      rank_desc, rank_partition, tier_plan)
+from repro.core.scheduler import pair_budgets
+from repro.utils.pytree import pytree_dataclass
+
+DEFAULTS = dict(alpha=0.5, confirm=2, cooldown=3, migration_period=1,
+                sample_period=10_000.0)
+
+
+@pytree_dataclass
+class JengaState:
+    ewma: jnp.ndarray      # f32 [n] per-page hotness estimate
+    tier: jnp.ndarray      # i32 [n] residency belief
+    streak: jnp.ndarray    # i32 [n] consecutive passes with same target
+    last_tgt: jnp.ndarray  # i32 [n] previous pass's raw target
+    moved_at: jnp.ndarray  # i32 [n] pass index of the page's last move
+    passes: jnp.ndarray    # i32 policy-pass counter
+    t: jnp.ndarray         # i32 interval counter
+
+
+@pytree_dataclass(meta=("bs_max",))
+class JengaSpec(PolicySpec):
+    alpha: jnp.ndarray             # EWMA weight of the newest interval
+    confirm: jnp.ndarray           # i32 confirmation streak before a move
+    cooldown: jnp.ndarray          # i32 passes a moved page stays pinned
+    migration_period: jnp.ndarray  # i32
+    sample_period: jnp.ndarray
+    bs_max: int = 128
+
+    name = "jenga"
+    tier_native = True
+
+    @classmethod
+    def make(cls, alpha=None, confirm=None, cooldown=None,
+             migration_period=None, sample_period=None,
+             bs_max: int = 128) -> "JengaSpec":
+        pick = lambda v, key: DEFAULTS[key] if v is None else v
+        return cls(
+            alpha=jnp.float32(pick(alpha, "alpha")),
+            confirm=jnp.int32(pick(confirm, "confirm")),
+            cooldown=jnp.int32(pick(cooldown, "cooldown")),
+            migration_period=jnp.int32(
+                pick(migration_period, "migration_period")),
+            sample_period=jnp.float32(pick(sample_period, "sample_period")),
+            bs_max=bs_max)
+
+    def pad_promote(self, n: int, k: int) -> int:
+        return max(1, min(n, 2 * self.bs_max))
+
+    def pad_demote(self, n: int, k: int) -> int:
+        return max(1, min(n, 2 * self.bs_max))
+
+    def init(self, n_pages, k, machine):
+        R = machine.lat_ns.shape[-1]
+        return JengaState(
+            ewma=jnp.zeros((n_pages,), jnp.float32),
+            tier=jnp.full((n_pages,), R - 1, jnp.int32),
+            streak=jnp.zeros((n_pages,), jnp.int32),
+            last_tgt=jnp.full((n_pages,), R - 1, jnp.int32),
+            moved_at=jnp.full((n_pages,), -(10 ** 6), jnp.int32),
+            passes=jnp.zeros((), jnp.int32),
+            t=jnp.zeros((), jnp.int32))
+
+    def sampling_period(self, state):
+        return jnp.asarray(self.sample_period, jnp.float32)
+
+    def min_sampling_period(self):
+        return float(np.min(np.asarray(self.sample_period)))
+
+    def observe(self, state, observed):
+        a = jnp.clip(self.alpha, 0.0, 1.0)
+        return state.replace(ewma=(1 - a) * state.ewma + a * observed,
+                             t=state.t + 1)
+
+    def fires(self, state):
+        period = jnp.maximum(self.migration_period.astype(jnp.int32), 1)
+        return (state.t % period) == 0
+
+    def tier_policy(self, state, tier_util, slow_bw, app_bw, k, caps):
+        n = state.ewma.shape[0]
+        p = state.passes + 1
+        raw = rank_partition(rank_desc(state.ewma), caps)
+        streak = jnp.where(raw == state.last_tgt, state.streak + 1,
+                           jnp.ones((), jnp.int32))
+        conf = jnp.maximum(self.confirm.astype(jnp.int32), 1)
+        cool = jnp.maximum(self.cooldown.astype(jnp.int32), 0)
+        eligible = (streak >= conf) & (p - state.moved_at > cool)
+        tgt = jnp.where(eligible, raw, state.tier)
+        budgets = pair_budgets(tier_util, self.bs_max)
+        pages, dst, tier = tier_plan(
+            state.ewma, state.tier, tgt, caps, budgets,
+            self.pad_demote(n, k), self.pad_promote(n, k))
+        moved_at = jnp.where(tier != state.tier, p, state.moved_at)
+        return (state.replace(tier=tier, streak=streak, last_tgt=raw,
+                              moved_at=moved_at, passes=p), pages, dst)
+
+
+class JengaPolicy(LegacyPolicyAdapter):
+    """Jenga for the numpy reference engine (functional spec inside)."""
+
+    def __init__(self, alpha=None, confirm=None, cooldown=None,
+                 migration_period=None, sample_period=None):
+        super().__init__(JengaSpec.make(
+            alpha, confirm, cooldown, migration_period, sample_period))

@@ -28,6 +28,33 @@ execute demotions first, then promotions capped by free capacity — see
 equivalent in ``engine.run`` (numpy engine); both agree exactly (property-
 tested in tests/test_policy_protocol.py).
 
+Tier-native contract
+--------------------
+Binary promote/demote only speaks about tier 0; middle tiers of an N-tier
+chain are reachable solely through the engine's hop-chain cascade.  Specs
+that set ``tier_native = True`` implement ``tier_policy`` instead and see
+the whole chain:
+
+    state, pages, dst = spec.tier_policy(
+        state, tier_util, slow_bw, app_bw, k, caps)
+
+``tier_util`` is the f32 [R] per-tier bandwidth utilization of the last
+interval (simjax.tier_utilization); ``caps`` the i32 [R] resolved per-tier
+capacities.  ``pages``/``dst`` are ``pad_moves(n, k)``-wide tier-TARGETED
+moves: sentinel-padded page indices in priority order (down-moves first,
+then up-moves) with explicit destination tiers (``simjax.DST_BELOW``
+requests the hop-chain demotion cascade).  The engines execute them with
+``simjax.apply_targeted_migrations``.  Per-pair migration budgets come
+from ``scheduler.pair_budgets(tier_util, bs_max)`` and are enforced
+policy-side by ``tier_plan``/``pair_limit`` below, so both engines see
+identical plans and a policy's residency belief stays exact.
+
+Binary specs need no changes: the base ``tier_policy`` is a shim that
+concatenates ``policy``'s demotions (dst=DST_BELOW) and promotions
+(dst=0), which ``apply_targeted_migrations`` executes bitwise-identically
+to the hop-chain path — asserted for all six families in
+tests/test_tier_native.py.
+
 ``LegacyPolicyAdapter`` wraps a spec back into the stateful ``Policy``
 interface so the numpy reference engine keeps replaying every policy with
 bitwise-identical decisions — that cross-engine agreement is the
@@ -42,6 +69,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.baselines.base import Policy
+from repro.simulator.simjax import DST_BELOW
 
 SENTINEL = -1
 
@@ -108,6 +136,10 @@ class PolicySpec:
     #: constant per spec (every baseline).
     dynamic_sampling_period: bool = False
     has_mode: bool = False
+    #: specs that see and target the tier vector directly implement
+    #: ``tier_policy`` and set this; binary specs reach the targeted
+    #: executor through the base shim (module docstring).
+    tier_native: bool = False
 
     DEFAULT_SAMPLE_PERIOD = 10_000.0
 
@@ -117,6 +149,11 @@ class PolicySpec:
 
     def pad_demote(self, n: int, k: int) -> int:
         return max(1, min(n, self.migration_limit))
+
+    def pad_moves(self, n: int, k: int) -> int:
+        """Width of the tier-native ``pages``/``dst`` arrays (down-moves
+        first, then up-moves — the shim's concatenation layout)."""
+        return self.pad_demote(n, k) + self.pad_promote(n, k)
 
     # --- pure functions over pytree state --------------------------------
     def init(self, n_pages: int, k: int, machine):
@@ -164,6 +201,40 @@ class PolicySpec:
 
         return jax.lax.cond(self.fires(state), fire, skip, state)
 
+    # --- tier-native contract --------------------------------------------
+    def tier_policy(self, state, tier_util, slow_bw, app_bw, k: int, caps):
+        """-> (state, pages, dst): tier-targeted moves (module docstring).
+
+        Base implementation is the BINARY SHIM: run the classic
+        promote/demote pass and emit demotions (dst=DST_BELOW, the
+        hop-chain cascade) followed by promotions (dst=0).  Executed
+        through ``simjax.apply_targeted_migrations`` this is bitwise the
+        hop-chain path, for every binary policy.
+        """
+        state, promote, demote = self.policy(state, slow_bw, app_bw, k)
+        pages = jnp.concatenate([demote, promote])
+        dst = jnp.concatenate(
+            [jnp.full(demote.shape, DST_BELOW, jnp.int32),
+             jnp.zeros(promote.shape, jnp.int32)])
+        return state, pages, dst
+
+    def step_tiers(self, state, observed, tier_util, slow_bw, app_bw,
+                   k: int, caps):
+        """Reference composition of the tier-native contract: observe,
+        then cond(fires) around ``tier_policy`` (numpy-engine path)."""
+        n = observed.shape[0]
+        state = self.observe(state, observed)
+        pm = self.pad_moves(n, k)
+
+        def fire(s):
+            return self.tier_policy(s, tier_util, slow_bw, app_bw, k, caps)
+
+        def skip(s):
+            return (s, jnp.full((pm,), SENTINEL, jnp.int32),
+                    jnp.zeros((pm,), jnp.int32))
+
+        return jax.lax.cond(self.fires(state), fire, skip, state)
+
 
 def capacity_victims(in_fast, cold_key, cold_mask, n_want, k: int, pad_d: int,
                      extra_need=0):
@@ -181,10 +252,127 @@ def capacity_victims(in_fast, cold_key, cold_mask, n_want, k: int, pad_d: int,
     return victims, n_vict, n_take
 
 
+# ------------------------------------------------ tier-native plan helpers
+def rank_desc(score):
+    """Dense 0-based rank of each page under DESCENDING score (rank 0 =
+    hottest; ties break by ascending page index — argsort is stable)."""
+    n = score.shape[0]
+    order = jnp.argsort(-score.astype(jnp.float32))
+    return jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+
+def rank_partition(rank, caps):
+    """Per-tier scores -> target placement: fill tiers shallowest-first by
+    rank against the capacity ladder (page with rank < caps[0] targets
+    tier 0, the next caps[1] ranks tier 1, ...).  Zero-capacity padded
+    tiers are skipped automatically.  Returns i32 [n] target tiers."""
+    cum = jnp.cumsum(caps)
+    return jnp.sum(rank[:, None] >= cum[None, :-1], axis=1).astype(jnp.int32)
+
+
+def pair_limit(lo, hi, valid, budgets):
+    """Per-pair budget filter over a priority-ordered move list.
+
+    Entry i crosses adjacent pairs ``lo[i] <= j < hi[i]``; it survives iff
+    for EVERY crossed pair fewer than ``budgets[j]`` earlier valid entries
+    cross that pair.  Counting earlier candidates (not earlier survivors)
+    keeps the filter one vectorized pass per pair; it is conservative —
+    never over budget, occasionally under when an earlier move was itself
+    dropped by a different pair.  Returns the surviving-entry mask.
+    """
+    ok = valid
+    for j in range(budgets.shape[0]):
+        crosses = valid & (lo <= j) & (j < hi)
+        rank = jnp.cumsum(crosses.astype(jnp.int32)) - 1
+        ok = ok & (~crosses | (rank < budgets[j]))
+    return ok
+
+
+def tier_plan(score, cur, target, caps, budgets, pad_down: int, pad_up: int):
+    """Feasible tier-targeted moves from a desired placement.
+
+    ``score`` f32 [n] per-page hotness, ``cur`` i32 [n] the policy's
+    residency belief, ``target`` i32 [n] the desired placement (e.g. from
+    ``rank_partition``), ``caps`` i32 [R], ``budgets`` i32 [R-1] per-pair
+    migration budgets (scheduler.pair_budgets).  Returns (pages, dst,
+    new_cur): a ``pad_down + pad_up``-wide sentinel-padded move list —
+    down-moves first (coldest-first), then up-moves (hottest-first) —
+    that ``simjax.apply_targeted_migrations`` is GUARANTEED to execute
+    verbatim (down-moves land exactly at their target, up-moves are all
+    admitted), because admission here mirrors the executor's order:
+    budgets first, then capacity bottom-up for downs / shallowest-first
+    for ups with departures freeing slots.  ``new_cur`` therefore stays
+    an exact belief of the engine-side placement.
+    """
+    i32 = jnp.int32
+    R = caps.shape[0]
+    n = score.shape[0]
+    target = jnp.clip(target, 0, R - 1)
+    occ = jnp.stack([(cur == r).sum() for r in range(R)]).astype(i32)
+
+    # down-moves: coldest-first, budget-filtered, then capacity-admitted
+    # bottom-up (deeper targets admit first; their departures free slots
+    # for shallower targets — the executor sees the same order).
+    d_pages, _ = ranked_take(score, target > cur, pad_down)
+    d_safe = jnp.where(d_pages >= 0, d_pages, 0)
+    d_valid = d_pages >= 0
+    d_cur = jnp.where(d_valid, cur[d_safe], 0)
+    d_tgt = jnp.where(d_valid, target[d_safe], R - 1)
+    d_ok = pair_limit(d_cur, d_tgt, d_valid, budgets)
+    adm_d = jnp.zeros(d_pages.shape, bool)
+    for r in range(R - 1, 0, -1):
+        dep = (adm_d & (d_cur == r)).sum().astype(i32)
+        room = caps[r] - occ[r] + dep
+        cand = d_ok & (d_tgt == r) & (~adm_d)
+        rank = jnp.cumsum(cand.astype(i32)) - 1
+        adm_d = adm_d | (cand & (rank < room))
+    d_pages = jnp.where(adm_d, d_pages, SENTINEL)
+    rem = jnp.stack([
+        budgets[j] - (adm_d & (d_cur <= j) & (j < d_tgt)).sum().astype(i32)
+        for j in range(R - 1)])
+    rem = jnp.maximum(rem, 0)
+    occ2 = occ + jnp.stack([
+        (adm_d & (d_tgt == r)).sum() - (adm_d & (d_cur == r)).sum()
+        for r in range(R)]).astype(i32)
+
+    # up-moves: hottest-first, remaining budgets, capacity-admitted
+    # shallowest-destination-first against the post-down occupancy.
+    u_pages, _ = ranked_take(-score, target < cur, pad_up)
+    u_safe = jnp.where(u_pages >= 0, u_pages, 0)
+    u_valid = u_pages >= 0
+    u_cur = jnp.where(u_valid, cur[u_safe], 0)
+    u_tgt = jnp.where(u_valid, target[u_safe], 0)
+    u_ok = pair_limit(u_tgt, u_cur, u_valid, rem)
+    adm_u = jnp.zeros(u_pages.shape, bool)
+    for r in range(R - 1):
+        dep = (adm_u & (u_cur == r)).sum().astype(i32)
+        room = caps[r] - occ2[r] + dep
+        cand = u_ok & (u_tgt == r) & (~adm_u)
+        rank = jnp.cumsum(cand.astype(i32)) - 1
+        adm_u = adm_u | (cand & (rank < room))
+    u_pages = jnp.where(adm_u, u_pages, SENTINEL)
+
+    new_cur = cur.at[jnp.where(adm_d, d_pages, n)].set(
+        d_tgt, mode="drop")
+    new_cur = new_cur.at[jnp.where(adm_u, u_pages, n)].set(
+        u_tgt, mode="drop")
+    pages = jnp.concatenate([d_pages, u_pages])
+    dst = jnp.concatenate([d_tgt, u_tgt])
+    return pages, dst, new_cur
+
+
 # ----------------------------------------------------------- legacy bridge
 @functools.partial(jax.jit, static_argnames=("k",))
 def _protocol_step(spec, state, observed, slow_bw, app_bw, k: int):
     return spec.step(state, observed, slow_bw, app_bw, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _protocol_step_tiers(spec, state, observed, tier_util, slow_bw, app_bw,
+                         k: int, caps):
+    return spec.step_tiers(state, observed, tier_util, slow_bw, app_bw,
+                           k, caps)
 
 
 class LegacyPolicyAdapter(Policy):
@@ -219,6 +407,10 @@ class LegacyPolicyAdapter(Policy):
             return 0
         return int(self.spec.mode_of(self.state))
 
+    @property
+    def tier_native(self) -> bool:
+        return type(self.spec).tier_native
+
     def step(self, observed, slow_bw_frac, app_bw_frac):
         self.state, promote, demote = _protocol_step(
             self.spec, self.state, jnp.asarray(observed, jnp.float32),
@@ -228,3 +420,19 @@ class LegacyPolicyAdapter(Policy):
         promote = np.asarray(promote, np.int64)
         demote = np.asarray(demote, np.int64)
         return promote[promote >= 0], demote[demote >= 0]
+
+    def step_tiers(self, observed, slow_bw_frac, app_bw_frac, tier_util,
+                   caps):
+        """Tier-native interval: -> (pages, dst) aligned i64 arrays with
+        sentinels dropped (priority order preserved)."""
+        self.state, pages, dst = _protocol_step_tiers(
+            self.spec, self.state, jnp.asarray(observed, jnp.float32),
+            jnp.asarray(tier_util, jnp.float32),
+            jnp.float32(slow_bw_frac), jnp.float32(app_bw_frac), self.k,
+            jnp.asarray(caps, jnp.int32))
+        if type(self.spec).dynamic_sampling_period:
+            self._period = float(self.spec.sampling_period(self.state))
+        pages = np.asarray(pages, np.int64)
+        dst = np.asarray(dst, np.int64)
+        keep = pages >= 0
+        return pages[keep], dst[keep]

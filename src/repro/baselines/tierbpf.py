@@ -1,0 +1,140 @@
+"""TierBPF-style baseline — migration admission control (tier-native).
+
+TierBPF (PAPERS.md) argues the migration *mechanism* should be guarded by
+an admission controller: promotions are only admitted above a hotness
+bar, and the migration budget backs off when recent promotions turn out
+to be regretted (the promoted pages are headed back down next pass — the
+thrashing signature).  This spec implements that controller on the
+tier-native contract:
+
+  * per-page EWMA hotness ranks pages against the capacity ladder;
+  * ``admit_thresh`` gates promotions — a page below the bar stays put
+    no matter its rank;
+  * a regret estimate (EWMA of the fraction of last pass's up-moves whose
+    target flipped back down) scales every pair budget by
+    ``1 - thrash_gain * regret`` — sustained thrash throttles migration
+    traffic toward zero instead of burning hop bandwidth.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.protocol import (LegacyPolicyAdapter, PolicySpec,
+                                      rank_desc, rank_partition, tier_plan)
+from repro.core.scheduler import pair_budgets
+from repro.utils.pytree import pytree_dataclass
+
+DEFAULTS = dict(alpha=0.5, admit_thresh=2.0, thrash_gain=2.0,
+                regret_alpha=0.3, migration_period=2,
+                sample_period=10_000.0)
+
+
+@pytree_dataclass
+class TierBPFState:
+    ewma: jnp.ndarray        # f32 [n]
+    tier: jnp.ndarray        # i32 [n] residency belief
+    up_at: jnp.ndarray       # i32 [n] pass index of the page's last up-move
+    regret: jnp.ndarray      # f32 scalar: recent-promotion regret estimate
+    passes: jnp.ndarray      # i32
+    t: jnp.ndarray           # i32
+
+
+@pytree_dataclass(meta=("bs_max",))
+class TierBPFSpec(PolicySpec):
+    alpha: jnp.ndarray             # hotness EWMA weight
+    admit_thresh: jnp.ndarray      # min EWMA hotness to admit a promotion
+    thrash_gain: jnp.ndarray       # budget backoff per unit regret
+    regret_alpha: jnp.ndarray      # regret-estimate EWMA weight
+    migration_period: jnp.ndarray  # i32
+    sample_period: jnp.ndarray
+    bs_max: int = 128
+
+    name = "tierbpf"
+    tier_native = True
+
+    @classmethod
+    def make(cls, alpha=None, admit_thresh=None, thrash_gain=None,
+             regret_alpha=None, migration_period=None, sample_period=None,
+             bs_max: int = 128) -> "TierBPFSpec":
+        pick = lambda v, key: DEFAULTS[key] if v is None else v
+        return cls(
+            alpha=jnp.float32(pick(alpha, "alpha")),
+            admit_thresh=jnp.float32(pick(admit_thresh, "admit_thresh")),
+            thrash_gain=jnp.float32(pick(thrash_gain, "thrash_gain")),
+            regret_alpha=jnp.float32(pick(regret_alpha, "regret_alpha")),
+            migration_period=jnp.int32(
+                pick(migration_period, "migration_period")),
+            sample_period=jnp.float32(pick(sample_period, "sample_period")),
+            bs_max=bs_max)
+
+    def pad_promote(self, n: int, k: int) -> int:
+        return max(1, min(n, 2 * self.bs_max))
+
+    def pad_demote(self, n: int, k: int) -> int:
+        return max(1, min(n, 2 * self.bs_max))
+
+    def init(self, n_pages, k, machine):
+        R = machine.lat_ns.shape[-1]
+        return TierBPFState(
+            ewma=jnp.zeros((n_pages,), jnp.float32),
+            tier=jnp.full((n_pages,), R - 1, jnp.int32),
+            up_at=jnp.full((n_pages,), -(10 ** 6), jnp.int32),
+            regret=jnp.zeros((), jnp.float32),
+            passes=jnp.zeros((), jnp.int32),
+            t=jnp.zeros((), jnp.int32))
+
+    def sampling_period(self, state):
+        return jnp.asarray(self.sample_period, jnp.float32)
+
+    def min_sampling_period(self):
+        return float(np.min(np.asarray(self.sample_period)))
+
+    def observe(self, state, observed):
+        a = jnp.clip(self.alpha, 0.0, 1.0)
+        return state.replace(ewma=(1 - a) * state.ewma + a * observed,
+                             t=state.t + 1)
+
+    def fires(self, state):
+        period = jnp.maximum(self.migration_period.astype(jnp.int32), 1)
+        return (state.t % period) == 0
+
+    def tier_policy(self, state, tier_util, slow_bw, app_bw, k, caps):
+        f32 = jnp.float32
+        n = state.ewma.shape[0]
+        p = state.passes + 1
+        raw = rank_partition(rank_desc(state.ewma), caps)
+        # regret: of the pages promoted LAST pass, how many does the
+        # ranking already want back down?  EWMA-smoothed, it throttles the
+        # budgets — the admission-control half of the policy.
+        recent = state.up_at == (p - 1)
+        flip = (recent & (raw > state.tier)).sum().astype(f32)
+        regret_now = flip / jnp.maximum(recent.sum().astype(f32), 1.0)
+        ra = jnp.clip(self.regret_alpha, 0.0, 1.0)
+        regret = (1 - ra) * state.regret + ra * regret_now
+        scale = jnp.clip(1.0 - self.thrash_gain * regret, 0.0, 1.0)
+        budgets = pair_budgets(tier_util, self.bs_max)
+        budgets = jnp.maximum(
+            jnp.floor(budgets.astype(f32) * scale).astype(jnp.int32), 1)
+        # admission gate: un-hot pages are never promoted, whatever their
+        # rank says this pass.
+        tgt = jnp.where((raw < state.tier)
+                        & (state.ewma < self.admit_thresh),
+                        state.tier, raw)
+        pages, dst, tier = tier_plan(
+            state.ewma, state.tier, tgt, caps, budgets,
+            self.pad_demote(n, k), self.pad_promote(n, k))
+        up_at = jnp.where(tier < state.tier, p, state.up_at)
+        return (state.replace(tier=tier, up_at=up_at, regret=regret,
+                              passes=p), pages, dst)
+
+
+class TierBPFPolicy(LegacyPolicyAdapter):
+    """TierBPF for the numpy reference engine (functional spec inside)."""
+
+    def __init__(self, alpha=None, admit_thresh=None, thrash_gain=None,
+                 regret_alpha=None, migration_period=None,
+                 sample_period=None):
+        super().__init__(TierBPFSpec.make(
+            alpha, admit_thresh, thrash_gain, regret_alpha,
+            migration_period, sample_period))

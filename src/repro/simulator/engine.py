@@ -146,6 +146,52 @@ def apply_tier_migrations_np(tier, promote, demote, caps):
     return promote, demote, mig_up, mig_down
 
 
+def apply_targeted_migrations_np(tier, pages, dst, caps):
+    """Numpy mirror of ``simjax.apply_targeted_migrations`` (variable-length
+    aligned ``pages``/``dst`` lists; mutates ``tier`` in place).
+
+    Returns (up_exec, down_exec, mig_up, mig_down): executed up-/down-move
+    page arrays (priority order preserved) and i64 [R-1] pair crossings.
+    """
+    from repro.simulator.simjax import DST_BELOW
+
+    R = len(caps)
+    pages = np.asarray(pages, np.int64)
+    dst = np.asarray(dst, np.int64)
+    src = tier[pages]
+    dst = np.where(dst == DST_BELOW, src + 1, dst)
+    dst = np.clip(dst, 0, R - 1)
+
+    down_m = dst > src
+    d_pages, d_src, d_dst = pages[down_m], src[down_m], dst[down_m]
+    dest = np.full(len(d_pages), R - 1, np.int64)
+    landed = np.zeros(len(d_pages), bool)
+    for r in range(1, R - 1):
+        occ_r = int((tier == r).sum()) - int((d_src == r).sum())
+        cand = np.flatnonzero(~landed & (d_dst <= r))
+        take = cand[:max(int(caps[r]) - occ_r, 0)]
+        dest[take] = r
+        landed[take] = True
+    tier[d_pages] = dest
+    mig_down = np.array([((d_src <= j) & (dest > j)).sum()
+                         for j in range(R - 1)], np.int64)
+
+    u_pages, u_dst = pages[~down_m], dst[~down_m]
+    taken = np.zeros(len(u_pages), bool)
+    u_from = np.zeros(len(u_pages), np.int64)
+    for r in range(R - 1):
+        u_src = tier[u_pages] if len(u_pages) else u_pages
+        cand = np.flatnonzero((u_dst == r) & (u_src > r))
+        room = max(int(caps[r]) - int((tier == r).sum()), 0)
+        take = cand[:room]
+        u_from[take] = u_src[take]
+        tier[u_pages[take]] = r
+        taken[take] = True
+    mig_up = np.array([(taken & (u_from > j) & (u_dst <= j)).sum()
+                       for j in range(R - 1)], np.int64)
+    return u_pages[taken], d_pages, mig_up, mig_down
+
+
 def run(policy: Policy, trace: np.ndarray, machine, k: int,
         seed: int = 0, sample_u: np.ndarray | None = None) -> SimResult:
     """Replay ``trace`` under ``policy`` (numpy reference engine).
@@ -186,6 +232,8 @@ def run(policy: Policy, trace: np.ndarray, machine, k: int,
     tier = np.full(n, R - 1, np.int32)    # everything starts at the bottom
     promoted_at = np.full(n, -(10 ** 9))
     demoted_at = np.full(n, -(10 ** 9))
+    tier_native = bool(getattr(policy, "tier_native", False))
+    tier_util = np.zeros(R)               # last interval's per-tier load
 
     slow_bw_frac = 1.0   # everything starts slow
     app_bw_frac = 0.0
@@ -209,11 +257,19 @@ def run(policy: Policy, trace: np.ndarray, machine, k: int,
         else:
             observed = pebs_sample(true, policy.sampling_period(), rng)
 
-        promote, demote = policy.step(observed, slow_bw_frac, app_bw_frac)
-
-        # --- engine-side validation, capacity + hop-chain execution ---
-        promote, demote, mig_up, mig_down = apply_tier_migrations_np(
-            tier, promote, demote, caps)
+        if tier_native:
+            pages, dstv = policy.step_tiers(
+                observed, slow_bw_frac, app_bw_frac, tier_util, caps)
+            # tier-targeted execution: ups/downs share the binary path's
+            # wasteful/counter accounting (an up-move IS a promotion).
+            promote, demote, mig_up, mig_down = apply_targeted_migrations_np(
+                tier, pages, dstv, caps)
+        else:
+            promote, demote = policy.step(observed, slow_bw_frac,
+                                          app_bw_frac)
+            # --- engine-side validation, capacity + hop-chain execution ---
+            promote, demote, mig_up, mig_down = apply_tier_migrations_np(
+                tier, promote, demote, caps)
 
         # --- wasteful-migration accounting ---
         wasteful += int((t - demoted_at[promote] <= WASTE_WINDOW).sum())
@@ -258,6 +314,15 @@ def run(policy: Policy, trace: np.ndarray, machine, k: int,
         # consumer-side clamp of the RAW utilization ratio: the policy
         # signal stays in [0,1] (bitwise the old at-source clamp).
         app_bw_frac = min(1.0, app_raw)
+        if tier_native:
+            if sample_u is not None:
+                tier_util = np.asarray(simjax.tier_utilization(
+                    mach_dev, true.astype(np.float32), jnp.asarray(tier),
+                    mig_up.astype(np.float32),
+                    mig_down.astype(np.float32)), np.float64)
+            else:
+                tier_util = machine_spec.tier_utilization_host(
+                    machine, accs, mig_up, mig_down)
 
         acc_fast_total += acc_fast
         acc_total += acc_fast + acc_slow

@@ -42,8 +42,11 @@ import numpy as np
 
 from repro.baselines.arms_policy import ARMSSpec
 from repro.baselines.hemem import HeMemSpec
+from repro.baselines.hybridtier import HybridTierSpec
+from repro.baselines.jenga import JengaSpec
 from repro.baselines.memtis import MemtisSpec
 from repro.baselines.static import AllSlowSpec, OracleSpec
+from repro.baselines.tierbpf import TierBPFSpec
 from repro.baselines.tpp import TPPSpec
 from repro.simulator import machine_spec, scan_engine, workload_spec
 from repro.simulator import machines as machines_mod
@@ -59,6 +62,10 @@ POLICY_REGISTRY = {
     "tpp": lambda: TPPSpec.make(),
     "all-slow": AllSlowSpec,
     "oracle": OracleSpec,
+    # tier-native families (see baselines/protocol.py, tier-native contract)
+    "hybridtier": lambda: HybridTierSpec.make(),
+    "jenga": lambda: JengaSpec.make(),
+    "tierbpf": lambda: TierBPFSpec.make(),
 }
 
 AXES = ("policy", "workload", "machine", "seed")
@@ -127,8 +134,28 @@ class SweepResult:
 def _dedup_labels(labels):
     """Disambiguate duplicate axis labels (``name#i``) — shared with the
     search engine, whose grouped modes key results by these labels."""
-    dup = {nm for nm in labels if labels.count(nm) > 1}
-    return [f"{nm}#{i}" if nm in dup else nm for i, nm in enumerate(labels)]
+    import collections
+    counts = collections.Counter(labels)
+    return [f"{nm}#{i}" if counts[nm] > 1 else nm
+            for i, nm in enumerate(labels)]
+
+
+#: lane_stack / TieredMachineSpec placeholder names that carry no identity;
+#: hand-built specs keep their given ``name``, these fall back to ``m{i}``.
+_ANON_MACHINE_NAMES = ("", "machine", "lanes")
+
+
+def _machine_labels(machines_in, mach_specs):
+    """Axis labels for the machine axis: the preset STRING the caller
+    passed, else the spec's own name, else a positional ``m{i}``."""
+    labels = []
+    for i, (m_in, sp) in enumerate(zip(machines_in, mach_specs)):
+        if isinstance(m_in, str):
+            labels.append(m_in)
+            continue
+        nm = getattr(sp, "name", "") or ""
+        labels.append(f"m{i}" if nm in _ANON_MACHINE_NAMES else nm)
+    return labels
 
 
 def _resolve_workloads(workloads, T):
@@ -175,6 +202,7 @@ def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
     machines_in = [machines] if not isinstance(machines, (list, tuple)) \
         else list(machines)
     mach_specs = [machines_mod.get(m) for m in machines_in]
+    mach_labels = _machine_labels(machines_in, mach_specs)
     seeds = list(seeds)
     P, M, S = len(pol_specs), len(mach_specs), len(seeds)
     if not (P and M and S):
@@ -266,7 +294,7 @@ def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
             w = l // (Pg * M * S)
             p = idxs[p_local[l]]
             m, s = m_of[l], s_of[l]
-            name = f"{pol_specs[p].name}@{wl_names[w]}[{mach_specs[m].name}]"
+            name = f"{pol_specs[p].name}@{wl_names[w]}[{mach_labels[m]}]"
             if S > 1:
                 name += f"[seed={seeds[s]}]"
             grid[((p * W + w) * M + m) * S + s] = scan_engine._to_result(
@@ -274,6 +302,6 @@ def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
 
     axes = dict(policy=_dedup_labels([sp.name for sp in pol_specs]),
                 workload=_dedup_labels(wl_names),
-                machine=_dedup_labels([m.name for m in mach_specs]),
+                machine=_dedup_labels(mach_labels),
                 seed=[str(s) for s in seeds])
     return SweepResult(axes=axes, grid=grid)

@@ -180,7 +180,7 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
               sampling: str, need_normal: bool, wl=None, wl_keys=None,
               noise_key=None, wl_rep: int = 1, n: int | None = None,
               wl_boost: bool = True, interval_kernel: bool = True,
-              reduce: str = "stack"):
+              reduce: str = "stack", tier_shim: bool = False):
     """Traceable batched replay; returns a dict of [B] scalars + timelines.
 
     Lanes (= sweep entries) form the leading axis of every carried array,
@@ -226,6 +226,17 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
         scan carry — the scan emits NO ys, so per-lane output memory is
         O(n), not O(T).  The result dict then carries ``mean_*`` /
         ``max_promotions_interval`` summaries and no ``timeline_*`` keys.
+
+    Specs with ``tier_native`` take the TIER-TARGETED route: the carry
+    additionally holds the last interval's per-tier utilization (f32
+    [B, R], ``simjax.tier_utilization``), the policy emits aligned
+    ``(pages, dst)`` moves via ``tier_policy``, and the engine executes
+    them with ``simjax.apply_targeted_migrations`` — up-moves count as
+    promotions, down-moves as demotions, sharing the binary path's
+    wasteful accounting.  ``tier_shim`` (static) forces BINARY specs
+    through that same route via the base-class shim; it is bitwise-equal
+    to the default hop-chain path (tests/test_tier_native.py), and exists
+    so tests can assert exactly that.
     """
     assert reduce in ("stack", "stream")
     if wl is None:
@@ -238,9 +249,12 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
     pad_p, pad_d = spec.pad_promote(n, k), spec.pad_demote(n, k)
     f32 = jnp.float32
 
+    tn = cls.tier_native or tier_shim
     vobserve = jax.vmap(cls.observe)
     vfires = jax.vmap(cls.fires)
     vpolicy = jax.vmap(cls.policy, in_axes=(0, 0, 0, 0, None))
+    vtier_policy = jax.vmap(cls.tier_policy,
+                            in_axes=(0, 0, 0, 0, 0, None, 0))
     vperiod = jax.vmap(cls.sampling_period)
     vmode = jax.vmap(cls.mode_of)
 
@@ -311,7 +325,52 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
             demote = jnp.where(do[:, None], demote, -1)
             return st, promote, demote
 
-        if interval_kernel:
+        if tn:
+            # Tier-targeted route: the policy sees the per-tier utilization
+            # and emits (pages, dst) moves; migrations + wasteful
+            # accounting ride inside the any-lane fire cond (bitwise a
+            # no-op on skip intervals — all-(-1) pages execute nothing).
+            def fire(op):
+                st, tier0, p_at0, d_at0 = op
+                st2, pages, dst = vtier_policy(
+                    spec, st, c["tier_util"], c["slow_bw"], c["app_bw"], k,
+                    caps)
+                st = _bwhere(do, st2, st)
+                pages = jnp.where(do[:, None], pages, -1)
+                tier, up_exec, down_exec, mig_up, mig_down = jax.vmap(
+                    simjax.apply_targeted_migrations)(tier0, pages, dst,
+                                                      caps)
+                waste, p_at, d_at = jax.vmap(
+                    simjax.wasteful_update,
+                    in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                    t - 1, p_at0, d_at0, pages, pages, up_exec, down_exec)
+                return (st, tier, p_at, d_at,
+                        up_exec.sum(axis=1).astype(jnp.int32),
+                        down_exec.sum(axis=1).astype(jnp.int32), waste,
+                        mig_up, mig_down)
+
+            def skip(op):
+                st, tier0, p_at0, d_at0 = op
+                z = jnp.zeros((B,), jnp.int32)
+                zp = jnp.zeros((B, R - 1), jnp.int32)
+                return st, tier0, p_at0, d_at0, z, z, z, zp, zp
+
+            (state, tier, promoted_at, demoted_at, n_promo, n_demo, waste,
+             mig_up, mig_down) = jax.lax.cond(
+                jnp.any(do), fire, skip,
+                (state, c["tier"], c["promoted_at"], c["demoted_at"]))
+            if interval_kernel:
+                acc_fast, acc_slow, wall, slow_share, app_raw, recall = \
+                    interval_ops.interval_account(
+                        mach, true_b, tier, mig_up.astype(f32),
+                        mig_down.astype(f32), orc_b, k)
+            else:
+                acc_fast, acc_slow, wall, slow_share, app_raw = jax.vmap(
+                    simjax.interval_accounting_impl)(
+                    mach, true_b, tier, mig_up.astype(f32),
+                    mig_down.astype(f32))
+                recall = ((tier == 0) & orc_b).sum(axis=1).astype(f32) / k
+        elif interval_kernel:
             # Fused route: migrations + wasteful accounting ride INSIDE the
             # any-lane fire cond.  On non-fire intervals the unfused path
             # executes them against all-(-1) plans — a bitwise no-op — so
@@ -396,6 +455,10 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
             acc_fast_total=c["acc_fast_total"] + acc_fast,
             acc_total=c["acc_total"] + acc_fast + acc_slow,
             recall_sum=c["recall_sum"] + recall)
+        if tn:
+            new_c["tier_util"] = jax.vmap(simjax.tier_utilization_impl)(
+                mach, true_b, tier, mig_up.astype(f32),
+                mig_down.astype(f32))
         if wl is not None:
             new_c["wl_state"] = wst
         hits_val = acc_fast / jnp.maximum(acc_fast + acc_slow, 1e-9)
@@ -413,6 +476,8 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
         return new_c, ys
 
     carry = _init_carry(spec, B, n, k, mach, keys)
+    if tn:
+        carry["tier_util"] = jnp.zeros((B, caps.shape[-1]), f32)
     if reduce == "stream":
         carry["slow_sum"] = jnp.zeros((B,), f32)
         carry["hits_sum"] = jnp.zeros((B,), f32)
@@ -456,13 +521,14 @@ warnings.filterwarnings(
     "ignore", message="Some donated buffers were not usable")
 @functools.partial(
     jax.jit, static_argnames=("k", "sampling", "need_normal",
-                              "interval_kernel", "reduce"),
+                              "interval_kernel", "reduce", "tier_shim"),
     donate_argnums=(0, 4, 5, 6))
 def _sim_jit(spec, trace, oracle_mask, k, mach, caps, keys, sample,
-             sampling, need_normal, interval_kernel=True, reduce="stack"):
+             sampling, need_normal, interval_kernel=True, reduce="stack",
+             tier_shim=False):
     return _simulate(spec, trace, oracle_mask, k, mach, caps, keys, sample,
                      sampling, need_normal, interval_kernel=interval_kernel,
-                     reduce=reduce)
+                     reduce=reduce, tier_shim=tier_shim)
 
 
 def _precompute_observations(trace, u, periods: tuple, need_normal: bool):
@@ -495,11 +561,12 @@ def _sim_pre_jit(spec, trace, oracle_mask, k, mach, caps, keys, u, periods,
 @functools.partial(
     jax.jit, static_argnames=("k", "sampling", "need_normal",
                               "wl_rep", "n", "wl_boost",
-                              "interval_kernel", "reduce"),
+                              "interval_kernel", "reduce", "tier_shim"),
     donate_argnums=(0, 3, 4, 5, 7, 8))
 def _sim_synth_jit(spec, wl, k, mach, caps, keys, sample, noise_key,
                    wl_keys, sampling, need_normal, wl_rep, n,
-                   wl_boost=True, interval_kernel=True, reduce="stack"):
+                   wl_boost=True, interval_kernel=True, reduce="stack",
+                   tier_shim=False):
     # NB: ``wl`` (position 1) and ``sample`` (6) are NOT donated —
     # experiment.sweep shares one workload stack / CRN field across every
     # per-family dispatch of a single axis-product call.
@@ -507,7 +574,7 @@ def _sim_synth_jit(spec, wl, k, mach, caps, keys, sample, noise_key,
                      sampling, need_normal, wl=wl, wl_keys=wl_keys,
                      noise_key=noise_key, wl_rep=wl_rep, n=n,
                      wl_boost=wl_boost, interval_kernel=interval_kernel,
-                     reduce=reduce)
+                     reduce=reduce, tier_shim=tier_shim)
 
 
 def _synth_need_normal(wl_specs, min_period: float) -> bool:
@@ -567,7 +634,8 @@ def _record_dispatch(**info):
 # ------------------------------------------------------------- public API
 def simulate(spec, trace, machine, k: int, seed: int = 0, sample_u=None,
              name: str | None = None,
-             use_interval_kernel: bool = True) -> SimResult:
+             use_interval_kernel: bool = True,
+             tier_shim: bool = False) -> SimResult:
     """Device-resident replay of ``trace`` under any policy spec.
 
     ``machine``: registry name / MachineSpec / TieredMachineSpec.
@@ -577,7 +645,9 @@ def simulate(spec, trace, machine, k: int, seed: int = 0, sample_u=None,
     ``jax.random`` from a key threaded through the scan carry.
     ``use_interval_kernel=False`` pins the historical unfused interval
     path — the fused route is bitwise-equal, so this only matters for
-    equivalence tests and the kernel benchmark.
+    equivalence tests and the kernel benchmark.  ``tier_shim=True`` forces
+    a binary spec through the tier-targeted executor via the protocol's
+    shim — also bitwise-equal (tests/test_tier_native.py).
     """
     trace = np.asarray(trace)
     assert 0 < k <= trace.shape[1]
@@ -591,7 +661,8 @@ def simulate(spec, trace, machine, k: int, seed: int = 0, sample_u=None,
                    jnp.asarray(oracle), k, mach, caps, keys, sample,
                    "crn" if crn else "prng",
                    _need_normal(trace, spec.min_sampling_period()),
-                   interval_kernel=use_interval_kernel)
+                   interval_kernel=use_interval_kernel,
+                   tier_shim=tier_shim)
     _record_dispatch(lanes=1, sampling="crn" if crn else "prng",
                      policy=spec.name, machines=1, T=trace.shape[0],
                      interval_kernel=use_interval_kernel, reduce="stack")

@@ -77,7 +77,13 @@ __all__ = [
 #: truncated normal over the grid's [min, max] range) instead of from the
 #: grid's categorical values.  The ARMS alphas are genuinely continuous
 #: controller gains; every other family's knobs are integer-ish grid values.
-CONTINUOUS_KNOBS = {"arms": frozenset({"alpha_s", "alpha_l"})}
+CONTINUOUS_KNOBS = {
+    "arms": frozenset({"alpha_s", "alpha_l"}),
+    "hybridtier": frozenset({"decay"}),
+    "jenga": frozenset({"alpha"}),
+    "tierbpf": frozenset({"alpha", "admit_thresh", "thrash_gain",
+                          "regret_alpha"}),
+}
 
 STRATEGIES = ("grid", "asha", "ce")
 

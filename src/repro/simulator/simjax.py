@@ -34,6 +34,13 @@ import jax.numpy as jnp
 from repro.simulator.engine import WASTE_WINDOW
 from repro.simulator.machine import CACHELINE, PAGE_BYTES
 
+#: destination sentinel for tier-targeted moves: "the first tier below the
+#: page's source with room" — the hop-chain demotion cascade.  The binary
+#: shim (protocol.PolicySpec.tier_policy) emits its demotions with this
+#: destination, which is what makes the shim bitwise-equal to
+#: ``apply_tier_migrations``.
+DST_BELOW = -2
+
 
 def tier_access_split(true, tier, R: int):
     """Per-tier f32 access counts [R] + the f32 total.
@@ -53,14 +60,12 @@ def tier_access_split(true, tier, R: int):
     return accs, total
 
 
-def tier_interval_outcome(mach, acc, mig_up, mig_down):
-    """N-tier interval cost (jnp mirror of
-    machine_spec.interval_outcome_host, f32).
+def _tier_times(mach, acc, mig_up, mig_down):
+    """Per-tier latency + bandwidth times (the shared inner arithmetic of
+    ``tier_interval_outcome`` and ``tier_utilization_impl`` — op-for-op the
+    historical expressions, so factoring it out is bitwise-neutral).
 
-    ``mach``: TieredMachineSpec leaves [R]; ``acc``: list/array of R f32
-    access counts; ``mig_up``/``mig_down``: f32 [R-1] pages crossing each
-    adjacent pair.  Returns (wall_s, slow_share, app_bw_frac_raw,
-    slow_bw_frac_raw); the *_raw ratios are unclamped (module docstring).
+    Returns (t_lat, [R] list of per-tier bandwidth times).
     """
     R = mach.lat_ns.shape[0]
     lat, br, bw = mach.lat_ns, mach.bw_read, mach.bw_write
@@ -82,6 +87,20 @@ def tier_interval_outcome(mach, acc, mig_up, mig_down):
             wr = wr + mig_up[r]
         times.append((acc[r] * CACHELINE + rd * PAGE_BYTES) / br[r]
                      + wr * PAGE_BYTES / bw[r])
+    return t_lat, times
+
+
+def tier_interval_outcome(mach, acc, mig_up, mig_down):
+    """N-tier interval cost (jnp mirror of
+    machine_spec.interval_outcome_host, f32).
+
+    ``mach``: TieredMachineSpec leaves [R]; ``acc``: list/array of R f32
+    access counts; ``mig_up``/``mig_down``: f32 [R-1] pages crossing each
+    adjacent pair.  Returns (wall_s, slow_share, app_bw_frac_raw,
+    slow_bw_frac_raw); the *_raw ratios are unclamped (module docstring).
+    """
+    R = mach.lat_ns.shape[0]
+    t_lat, times = _tier_times(mach, acc, mig_up, mig_down)
 
     rest_max = times[1]
     for r in range(2, R):
@@ -119,6 +138,30 @@ def interval_accounting_impl(mach, true_counts, tier, mig_up, mig_down):
 
 
 interval_accounting = jax.jit(interval_accounting_impl)
+
+
+def tier_utilization_impl(mach, true_counts, tier, mig_up, mig_down):
+    """Per-tier bandwidth utilization f32 [R]: each tier's bandwidth time
+    as a fraction of the interval wall time.
+
+    The tier-native policy signal (protocol.PolicySpec.tier_policy):
+    ``scheduler.pair_budgets`` runs the BS formula against a pair's
+    more-saturated endpoint, so policies back migrations off whichever
+    tier of a hop is the bottleneck.  Only tier-native programs compute
+    it (statically gated in both engines), so existing compiled paths are
+    untouched.  Neutral padded tiers (bw inf) report 0.
+    """
+    R = mach.lat_ns.shape[0]
+    true = jnp.asarray(true_counts, jnp.float32)
+    accs, _ = tier_access_split(true, tier, R)
+    t_lat, times = _tier_times(mach, accs, jnp.asarray(mig_up, jnp.float32),
+                               jnp.asarray(mig_down, jnp.float32))
+    stack = jnp.stack(times)
+    wall = jnp.maximum(jnp.maximum(t_lat, stack.max()), 1e-12)
+    return stack / wall
+
+
+tier_utilization = jax.jit(tier_utilization_impl)
 
 
 # ------------------------------------------------------------- migrations
@@ -173,6 +216,77 @@ def apply_tier_migrations(tier, promote, demote, caps):
     mig_down = jnp.stack([(dexec & (src <= j) & (dest > j)).sum().astype(i32)
                           for j in range(R - 1)])
     return tier, pexec, dexec, mig_up, mig_down
+
+
+def apply_targeted_migrations(tier, pages, dst, caps):
+    """Tier-TARGETED migrations: each valid entry of ``pages`` (sentinel
+    -1 padded, priority order, unique per direction) requests a move to
+    ``dst[i]``; ``DST_BELOW`` resolves to "first tier below the source
+    with room" (the hop-chain demotion cascade).
+
+    Execution order mirrors ``apply_tier_migrations`` exactly:
+
+      * DOWN moves (resolved dst > src) run first, in priority order.
+        A down-mover lands at the shallowest tier r >= its requested dst
+        with free capacity (cascading deeper when full; the bottom always
+        has room), so every down-mover leaves its source — which is what
+        keeps the occupancy-after-departures precomputation valid.
+      * UP moves (dst < src) then run per destination tier, shallowest
+        first, each reading occupancy AFTER the downs and any earlier
+        ups; requests that don't fit their exact destination are DROPPED
+        (never cascaded), like hop-chain promotions.
+
+    With the binary shim's inputs — demotions first with dst=DST_BELOW,
+    then promotions with dst=0 — every expression reduces to the
+    corresponding one in ``apply_tier_migrations``, and all arithmetic is
+    integer/boolean, so the executed sets (and everything downstream) are
+    bitwise identical.  Returns (tier, up_exec, down_exec, mig_up,
+    mig_down) with the executed masks aligned to ``pages``.
+    """
+    R = caps.shape[0]
+    n = tier.shape[0]
+    i32 = jnp.int32
+
+    safe = jnp.where(pages >= 0, pages, 0)
+    valid = pages >= 0
+    src = tier[safe]
+    dst = jnp.where(dst == DST_BELOW, src + 1, dst)
+    dst = jnp.clip(dst, 0, R - 1)
+    down = valid & (dst > src)           # src == R-1 can never move down
+
+    dest = jnp.full(pages.shape, R - 1, i32)
+    landed = jnp.zeros(pages.shape, bool)
+    for r in range(1, R - 1):
+        # occupancy after departures: every down-mover leaves its source
+        # tier (it always lands somewhere below), freeing that slot.
+        occ_r = (tier == r).sum() - (down & (src == r)).sum()
+        cand = down & (~landed) & (dst <= r)
+        rank = jnp.cumsum(cand.astype(i32)) - 1
+        land = cand & (rank < caps[r] - occ_r)
+        dest = jnp.where(land, r, dest)
+        landed = landed | land
+    tier = tier.at[jnp.where(down, pages, n)].set(dest, mode="drop")
+    mig_down = jnp.stack([(down & (src <= j) & (dest > j)).sum().astype(i32)
+                          for j in range(R - 1)])
+
+    # up phase: destination tiers shallowest-first; sources re-read from
+    # the updated placement (post-downs, post-earlier-ups), so room freed
+    # by ups OUT of a tier is visible to ups INTO it.
+    up_exec = jnp.zeros(pages.shape, bool)
+    up_from = jnp.zeros(pages.shape, i32)
+    for r in range(R - 1):
+        u_src = tier[safe]
+        cand = valid & (~down) & (dst == r) & (u_src > r)
+        room = caps[r] - (tier == r).sum().astype(i32)
+        rank = jnp.cumsum(cand.astype(i32)) - 1
+        take = cand & (rank < room)
+        up_from = jnp.where(take, u_src, up_from)
+        tier = tier.at[jnp.where(take, pages, n)].set(r, mode="drop")
+        up_exec = up_exec | take
+    mig_up = jnp.stack([(up_exec & (up_from > j) & (dst <= j)).sum()
+                        .astype(i32) for j in range(R - 1)])
+    # every down executes: the cascade bottoms out at R-1, which has room.
+    return tier, up_exec, down, mig_up, mig_down
 
 
 def apply_padded_migrations(in_fast, promote, demote, k: int):

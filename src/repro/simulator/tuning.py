@@ -32,7 +32,10 @@ import numpy as np
 
 from repro.baselines.arms_policy import ARMSSpec
 from repro.baselines.hemem import HeMemSpec
+from repro.baselines.hybridtier import HybridTierSpec
+from repro.baselines.jenga import JengaSpec
 from repro.baselines.memtis import MemtisSpec
+from repro.baselines.tierbpf import TierBPFSpec
 from repro.baselines.tpp import TPPSpec
 from repro.simulator import search
 
@@ -67,12 +70,45 @@ ARMS_SPACE = dict(
 )
 ARMS_DEFAULTS = dict(alpha_s=0.7, alpha_l=0.1, noise_z=0.25, pht_lambda=0.10)
 
+# Tier-native families (PR 8).  Their knobs route through the same grid /
+# asha / ce strategies — the search engine groups lanes by spec type, so a
+# tier-native population still runs as one compiled dispatch per round.
+HYBRIDTIER_SPACE = dict(
+    hot_thresh=[2.0, 4.0, 6.0, 9.0, 12.0],
+    warm_thresh=[0.5, 1.0, 2.0],
+    decay=[0.5, 0.7, 0.9],
+    migration_period=[2, 4, 8],
+)
+HYBRIDTIER_DEFAULTS = dict(hot_thresh=6.0, warm_thresh=1.0, decay=0.7,
+                           migration_period=4)
+
+JENGA_SPACE = dict(
+    alpha=[0.3, 0.5, 0.7, 0.9],
+    confirm=[1, 2, 3, 4],
+    cooldown=[0, 1, 3, 6],
+    migration_period=[1, 2],
+)
+JENGA_DEFAULTS = dict(alpha=0.5, confirm=2, cooldown=3, migration_period=1)
+
+TIERBPF_SPACE = dict(
+    alpha=[0.3, 0.5, 0.7],
+    admit_thresh=[1.0, 2.0, 4.0, 8.0],
+    thrash_gain=[0.5, 1.0, 2.0, 4.0],
+    regret_alpha=[0.1, 0.3, 0.5],
+)
+TIERBPF_DEFAULTS = dict(alpha=0.5, admit_thresh=2.0, thrash_gain=2.0,
+                        regret_alpha=0.3)
+
 #: name -> (spec factory taking the space's keys as kwargs, space, defaults)
 FAMILIES = {
     "hemem": (HeMemSpec.make, SPACE, HEMEM_DEFAULTS),
     "memtis": (MemtisSpec.make, MEMTIS_SPACE, MEMTIS_DEFAULTS),
     "tpp": (TPPSpec.make, TPP_SPACE, TPP_DEFAULTS),
     "arms": (lambda **cfg: ARMSSpec.make(cfg), ARMS_SPACE, ARMS_DEFAULTS),
+    "hybridtier": (HybridTierSpec.make, HYBRIDTIER_SPACE,
+                   HYBRIDTIER_DEFAULTS),
+    "jenga": (JengaSpec.make, JENGA_SPACE, JENGA_DEFAULTS),
+    "tierbpf": (TierBPFSpec.make, TIERBPF_SPACE, TIERBPF_DEFAULTS),
 }
 
 

@@ -101,6 +101,7 @@ class WorkloadSpec:
     boost_gain: jnp.ndarray    # f32 [S] gapbs boost mass (pre-normalize)
     period: jnp.ndarray        # i32 [S] duty-cycle period (liblinear)
     duty: jnp.ndarray          # f32 [S] busy fraction of the period
+    phase_off: jnp.ndarray     # i32 [S] duty-cycle phase offset (intervals)
     idle_scale: jnp.ndarray    # f32 [S] work multiplier when idle
     drift_rate: jnp.ndarray    # f32 [S] whole-distribution drift (combinator)
     seed: jnp.ndarray          # i32 [S] per-component randomness seed
@@ -163,7 +164,11 @@ class WorkloadSpec:
         f32 = jnp.float32
         active = ((t >= self.t_start) & (t < self.t_end)).astype(f32)
         per = jnp.maximum(self.period, 1)
-        busy = (t % per).astype(f32) < self.duty * per.astype(f32)
+        # phase_off staggers duty cycles across components (antiphase
+        # tenants, adversarial phase flips — simulator/scenarios.py);
+        # the default 0 is bitwise the historical formula.
+        busy = ((t + self.phase_off) % per).astype(f32) \
+            < self.duty * per.astype(f32)
         m = jnp.where(busy, f32(1.0), self.idle_scale)
         return self.weight * active * self.work * m
 
@@ -299,21 +304,22 @@ def _comp(kind, *, work=DEFAULT_WORK, weight=1.0, t_start=0, t_end=NEVER,
           s=0.0, hot_frac=0.0, hot_weight=0.0, shift_every=NEVER,
           window_frac=0.0, drift_pages=0.0, boost_every=NEVER,
           boost_frac=0.0, boost_gain=0.0, period=1, duty=1.0,
-          idle_scale=1.0, drift_rate=0.0, seed=0) -> dict:
+          phase_off=0, idle_scale=1.0, drift_rate=0.0, seed=0) -> dict:
     return dict(kind=kind, work=work, weight=weight, t_start=t_start,
                 t_end=t_end, s=s, hot_frac=hot_frac, hot_weight=hot_weight,
                 shift_every=max(1, int(shift_every)),
                 window_frac=window_frac, drift_pages=drift_pages,
                 boost_every=max(1, int(boost_every)), boost_frac=boost_frac,
                 boost_gain=boost_gain, period=max(1, int(period)), duty=duty,
-                idle_scale=idle_scale, drift_rate=drift_rate, seed=int(seed))
+                phase_off=int(phase_off), idle_scale=idle_scale,
+                drift_rate=drift_rate, seed=int(seed))
 
 
 _F32 = ("work", "weight", "s", "hot_frac", "hot_weight", "window_frac",
         "drift_pages", "boost_frac", "boost_gain", "duty", "idle_scale",
         "drift_rate")
 _I32 = ("kind", "t_start", "t_end", "shift_every", "boost_every", "period",
-        "seed")
+        "phase_off", "seed")
 
 
 def _from_comps(comps: list[dict]) -> WorkloadSpec:
@@ -460,6 +466,10 @@ def phases(specs: list[WorkloadSpec], boundaries: list[int],
                          f"got {len(boundaries)} vs {len(specs)}")
     if any(b2 <= b1 for b1, b2 in zip(boundaries, boundaries[1:])):
         raise ValueError(f"boundaries must ascend; got {boundaries}")
+    if boundaries and int(boundaries[0]) < 1:
+        # boundary 0 makes phase 0 a zero-length window: its spec would
+        # silently never run.
+        raise ValueError(f"first boundary must be >= 1; got {boundaries}")
     edges = [0] + [int(b) for b in boundaries] + [NEVER]
     comps = []
     for p, sp in enumerate(specs):

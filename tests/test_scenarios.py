@@ -1,0 +1,112 @@
+"""Adversarial scenario suite: sizing, phase behaviour, degenerate knobs.
+
+The scenario constructors (``simulator/scenarios.py``) are parameterized
+relative to the machine geometry (n, k); these tests pin the sizing
+arithmetic, the ``phase_off`` duty staggering they rely on, and the
+clamps that keep degenerate knob values (drift past n, zero-length flip
+windows, hot fractions rounding to zero pages) well-defined.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.simulator import scenarios
+from repro.simulator import workload_spec as ws
+
+T, N, K = 48, 256, 32
+
+
+class TestSuite:
+    def test_suite_labels_and_shapes(self):
+        suite = scenarios.suite(N, K)
+        labels = [ws.label_of(s) for s in suite]
+        assert len(labels) == len(set(labels)) == 6
+        assert labels[:3] == ["straddle-0.9x", "straddle-1x",
+                              "straddle-1.1x"]
+        for s in suite:
+            tr = np.asarray(s.materialize(T, N, seed=0))
+            assert tr.shape == (T, N)
+            assert np.isfinite(tr).all() and (tr >= 0).all()
+
+    def test_straddle_sizing_tracks_fast_tier(self):
+        for ratio in scenarios.STRADDLE_RATIOS:
+            s = scenarios.capacity_straddle(N, K, ratio)
+            np.testing.assert_allclose(np.asarray(s.hot_frac),
+                                       [ratio * K / N], rtol=1e-6)
+
+
+class TestPhaseFlip:
+    def test_hot_sets_alternate_and_repeat(self):
+        pf = scenarios.phase_flip(N, K, period=10)
+        tr = np.asarray(pf.materialize(30, N, seed=0))
+        top = lambda row: set(np.argsort(-row)[:20])
+        # antiphase: the two half-period windows expose different hot sets
+        assert len(top(tr[0]) & top(tr[5])) < 10
+        # periodic: one full period later the distribution recurs exactly
+        np.testing.assert_array_equal(tr[0], tr[10])
+        np.testing.assert_array_equal(tr[5], tr[15])
+
+    def test_exactly_one_tenant_busy(self):
+        td = scenarios.duty_cycled_tenants(N, K, tenants=3, period=60)
+        for t in (0, 20, 40, 59):
+            rates = np.asarray(td._rates(jnp.int32(t)))
+            assert (rates > 0.5 * rates.max()).sum() == 1
+
+
+class TestDegenerateKnobs:
+    def test_drift_rate_wraps_mod_n(self):
+        s = scenarios.drifting_hot(N, K, rate=N + 44.0)
+        assert ws.label_of(s) == "drift-44"
+        np.testing.assert_allclose(np.asarray(s.drift_rate), 44.0)
+        # a full-wrap rate is the identity drift, not an error
+        s0 = scenarios.drifting_hot(N, K, rate=float(N))
+        np.testing.assert_allclose(np.asarray(s0.drift_rate), 0.0)
+
+    def test_flip_period_floors_at_two(self):
+        for bad in (0, 1, -3):
+            s = scenarios.phase_flip(N, K, period=bad)
+            assert ws.label_of(s) == "phase-flip-2"
+            tr = np.asarray(s.materialize(8, N, seed=0))
+            assert np.isfinite(tr).all()
+
+    def test_hot_frac_never_rounds_to_zero_pages(self):
+        # tiny ratio * k on a small machine: still at least one hot page
+        s = scenarios.capacity_straddle(8, 4, 0.01)
+        assert float(s.hot_frac[0]) >= 1.0 / 8
+        tr = np.asarray(s.materialize(8, 8, seed=0))
+        assert np.isfinite(tr).all()
+
+    def test_phases_rejects_zero_length_first_window(self):
+        a = ws.gups_spec()
+        b = ws.zipf_spec()
+        with pytest.raises(ValueError):
+            ws.phases([a, b], [0])
+        ws.phases([a, b], [1])  # minimal non-degenerate window is fine
+
+
+class TestPhaseOffNeutrality:
+    def test_default_zero_matches_historical_duty_formula(self):
+        # every pre-PR-8 spec has phase_off == 0; its _rates must equal
+        # the historical busy test (t % period) < duty * period, bitwise.
+        spec = ws.liblinear_spec()
+        assert np.all(np.asarray(spec.phase_off) == 0)
+        per = np.maximum(np.asarray(spec.period), 1)
+        duty = np.asarray(spec.duty)
+        idle = np.asarray(spec.idle_scale)
+        w = np.asarray(spec.weight) * np.asarray(spec.work)
+        for t in range(40):
+            busy = (np.float32(t % per)
+                    < (duty * per.astype(np.float32)).astype(np.float32))
+            expect = w * np.where(busy, 1.0, idle)
+            np.testing.assert_array_equal(
+                np.asarray(spec._rates(jnp.int32(t))).astype(np.float64),
+                expect.astype(np.float32).astype(np.float64))
+
+    def test_phase_off_staggers_busy_windows(self):
+        mk = lambda off: ws._from_comps([ws._comp(
+            ws.KIND_HOTSET, hot_frac=0.1, hot_weight=0.9, period=10,
+            duty=0.5, phase_off=off, idle_scale=0.0)])
+        on = lambda s, t: float(s._rates(jnp.int32(t))[0]) > 0
+        a, b = mk(0), mk(5)
+        for t in range(20):
+            assert on(a, t) != on(b, t)    # perfectly antiphase
