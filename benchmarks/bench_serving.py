@@ -1,0 +1,198 @@
+"""Serving benchmark: the closed model-stack loop (DESIGN.md §10).
+
+Four pieces, one record (``BENCH_serving.json``):
+
+* **policy x arch serving grid** — ``launch/serve.py`` decode runs with
+  the tiered paged-KV pool under several policy families: tokens/s plus
+  the leaderboard telemetry (slowdown vs all-fast, thrash, promotions).
+* **telemetry sync cost** (satellite b) — the same run with the legacy
+  per-token host-sync telemetry vs the device-side carry (one sync at
+  the end); records the before/after tokens/s.
+* **capture -> fit -> sweep** — the serving run's attention-mass stream
+  is captured as a ``TraceWorkload``, fitted to WorkloadSpec knobs, and
+  swept TOGETHER with the multi-tenant ``scenarios.serving_mix`` built
+  from the fitted spec, for every leaderboard policy family across
+  machines — ONE ``experiment.sweep`` call, one compiled dispatch per
+  family (asserted via ``scan_engine.dispatch_count``).
+* **trace replay** — the captured trace itself runs as a sweep lane
+  (``traces.replay``), appearing as the ``trace`` scenario row of the
+  board.
+
+The board scores each (policy, scenario, machine) cell as slowdown vs
+the per-cell oracle, robustness-leaderboard style (sorted by worst
+case).
+
+Usage: PYTHONPATH=src:. python benchmarks/bench_serving.py \
+           [--out BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.simulator import experiment, scan_engine, scenarios, traces
+
+#: serving-grid axes (full run); the gate shrinks tokens, not the axes.
+ARCHES = ("granite-8b", "stablelm-1.6b")
+SERVE_POLICIES = ("arms", "memtis", "jenga")
+#: sweep axes: the robustness-leaderboard families and machine set, plus
+#: the serving preset whose fast tier is pinned to the roofline HBM bw.
+SWEEP_POLICIES = ("oracle", "arms", "hemem", "memtis", "tpp",
+                  "hybridtier", "jenga", "tierbpf")
+SWEEP_MACHINES = ("hbm-pcie", "pmem-large")
+
+
+def _serve_grid(arches, policies, n_tokens, batch):
+    from repro.launch.serve import serve
+    grid = {}
+    capture = None
+    for arch in arches:
+        for pol in policies:
+            t0 = time.time()
+            rep = serve(arch, n_tokens=n_tokens, batch=batch, page_size=4,
+                        policy=pol, capture=capture is None, quiet=True)
+            grid[f"{arch}/{pol}"] = dict(
+                tok_s=round(rep.tok_s, 2),
+                wall_s=round(time.time() - t0, 3),
+                promotions=rep.promotions, demotions=rep.demotions,
+                thrash=round(rep.thrash, 4),
+                slowdown=round(rep.slowdown, 4),
+                fast_mass_end=round(float(rep.fast_mass[-1]), 4))
+            if capture is None:
+                capture = rep.trace
+    return grid, capture
+
+
+def _sync_comparison(arch, n_tokens, batch):
+    """satellite (b): per-token host-sync telemetry vs device-side carry."""
+    from repro.launch.serve import serve
+    kw = dict(n_tokens=n_tokens, batch=batch, page_size=4, quiet=True)
+    serve(arch, **kw)                                  # warm the caches
+    sync = serve(arch, sync_telemetry=True, **kw).tok_s
+    async_ = serve(arch, **kw).tok_s
+    return dict(tok_s_synced=round(sync, 2), tok_s_device=round(async_, 2),
+                speedup=round(async_ / max(sync, 1e-9), 3))
+
+
+def _board(res):
+    """Leaderboard rows: slowdown vs the per-cell BEST policy, worst-case
+    sorted.  (bench_robustness normalizes by the oracle; here the machine
+    axis includes hbm-pcie, where fast-tier accesses are nearly free and
+    the oracle's every-interval remigration over PCIe makes it the
+    WORST policy on churny cells — the per-cell best is the meaningful
+    yardstick, and slowdown >= 1 by construction.)"""
+    scen, mach = res.axes["workload"], res.axes["machine"]
+    oracle = {(w, m): min(res.at(policy=p, workload=w,
+                                 machine=m).exec_time_s
+                          for p in res.axes["policy"])
+              for w in scen for m in mach}
+    board = {}
+    for p in res.axes["policy"]:
+        cells = []
+        for w in scen:
+            for m in mach:
+                r = res.at(policy=p, workload=w, machine=m)
+                moves = r.promotions + r.demotions
+                cells.append(dict(
+                    scenario=w, machine=m,
+                    slowdown=round(r.exec_time_s / oracle[(w, m)], 4),
+                    thrash=round(r.wasteful / max(moves, 1), 4)))
+        worst = max(cells, key=lambda c: c["slowdown"])
+        board[p] = dict(
+            worst_slowdown=worst["slowdown"],
+            worst_cell=f"{worst['scenario']}@{worst['machine']}",
+            mean_slowdown=round(sum(c["slowdown"] for c in cells)
+                                / len(cells), 4),
+            cells=cells)
+    return board
+
+
+def run_serving(n_tokens: int = 32, batch: int = 2, T: int = 96,
+                n: int = 256, k: int = 32, arches=ARCHES,
+                serve_policies=SERVE_POLICIES, policies=SWEEP_POLICIES,
+                machines=SWEEP_MACHINES, tenants: int = 4) -> dict:
+    """Run the full serving benchmark; returns the BENCH_serving record."""
+    grid, tw = _serve_grid(arches, serve_policies, n_tokens, batch)
+    sync = _sync_comparison(arches[0], n_tokens, batch)
+
+    # capture -> fit -> multi-tenant scenario, swept with every family
+    fit = traces.fit_workload_spec(tw)
+    mix = scenarios.serving_mix(n, k, tenants=tenants, specs=[fit])
+    n_families = len({type(experiment.policy_spec(p)) for p in policies})
+
+    d0 = scan_engine.dispatch_count
+    t0 = time.time()
+    res = experiment.sweep(list(policies), workloads=[fit, mix],
+                           machines=list(machines), k=k, T=T, n=n)
+    sweep_disp = scan_engine.dispatch_count - d0
+    d0 = scan_engine.dispatch_count
+    # the replay lane runs at the CAPTURED geometry (tw.n pages), with a
+    # proportional fast tier
+    rep = traces.replay(tw, list(policies), machines=list(machines))
+    replay_disp = scan_engine.dispatch_count - d0
+    wall = time.time() - t0
+
+    board = _board(res)
+    replay_board = _board(rep)
+    # the captured trace is a scenario row of the combined leaderboard
+    for p, row in replay_board.items():
+        board[p]["cells"].extend(row["cells"])
+        worst = max(board[p]["cells"], key=lambda c: c["slowdown"])
+        board[p].update(
+            worst_slowdown=worst["slowdown"],
+            worst_cell=f"{worst['scenario']}@{worst['machine']}",
+            mean_slowdown=round(sum(c["slowdown"]
+                                    for c in board[p]["cells"])
+                                / len(board[p]["cells"]), 4))
+    ranked = sorted(board, key=lambda p: board[p]["worst_slowdown"])
+    scen_rows = sorted({c["scenario"] for c in board[ranked[0]]["cells"]})
+
+    return dict(
+        n_tokens=n_tokens, batch=batch, T=T, n_pages=n, k=k,
+        serving_grid=grid, telemetry_sync=sync,
+        trace=dict(label=tw.label, T=tw.T, n=tw.n,
+                   total=round(tw.total(), 3)),
+        fitted_label=f"fit:{tw.label}",
+        scenarios=scen_rows, machines=list(machines),
+        policies=list(map(str, policies)), n_families=n_families,
+        sweep_dispatches=sweep_disp, replay_dispatches=replay_disp,
+        single_dispatch_per_family=(sweep_disp == n_families
+                                    and replay_disp == n_families),
+        wall_s=round(wall, 3), ranking=ranked, leaderboard=board)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--T", type=int, default=96)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--k", type=int, default=32)
+    args = ap.parse_args()
+
+    rec = run_serving(n_tokens=args.tokens, T=args.T, n=args.n, k=args.k)
+    # merge: keep the "gate" record CI wrote, replace the full-scale one.
+    try:
+        with open(args.out) as f:
+            out = json.load(f)
+    except (OSError, ValueError):
+        out = {}
+    out["full"] = rec
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"sweep dispatches={rec['sweep_dispatches']} + replay "
+          f"{rec['replay_dispatches']} (families={rec['n_families']}) "
+          f"wall={rec['wall_s']}s  sync speedup="
+          f"{rec['telemetry_sync']['speedup']}x")
+    hdr = f"{'policy':<12} {'worst':>7} {'mean':>7}  worst cell"
+    print(hdr + "\n" + "-" * len(hdr))
+    for p in rec["ranking"]:
+        b = rec["leaderboard"][p]
+        print(f"{p:<12} {b['worst_slowdown']:>7.3f} "
+              f"{b['mean_slowdown']:>7.3f}  {b['worst_cell']}")
+
+
+if __name__ == "__main__":
+    main()

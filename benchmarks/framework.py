@@ -68,13 +68,14 @@ def bench_kernels():
 
 
 def bench_tiered_serving():
-    """Tokens/s + ARMS telemetry for the tiered paged-KV serving layer."""
+    """Tokens/s + tiering telemetry for the tiered paged-KV serving layer."""
     from repro.launch.serve import serve
     t0 = time.time()
-    tok_s, promos, mass = serve("granite-8b", n_tokens=48, batch=2)
+    rep = serve("granite-8b", n_tokens=48, batch=2, quiet=True)
     emit("serving.tiered_paged_kv", (time.time() - t0) * 1e6,
-         f"tok_s={tok_s:.1f};promotions={promos};"
-         f"fast_mass_end={mass[-1]:.3f}")
+         f"tok_s={rep.tok_s:.1f};promotions={rep.promotions};"
+         f"fast_mass_end={rep.fast_mass[-1]:.3f};"
+         f"slowdown={rep.slowdown:.2f}")
 
 
 def bench_sparse_serving():

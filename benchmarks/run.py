@@ -39,6 +39,10 @@ def main() -> None:
     # runs the adversarial-scenario leaderboard (all eight policy
     # families x scenarios x machines as ONE dispatch per family, ARMS
     # worst-case slowdown bounded) — recorded in BENCH_robustness.json.
+    # The serving gate closes the model-stack loop: decode traffic on the
+    # policy-generic tiered paged-KV pool, captured -> fitted -> swept
+    # with the trace-replay lane, one dispatch per family — recorded in
+    # BENCH_serving.json.
     pt.bench_baseline_sweep_gate()
     pt.bench_workload_sweep_gate()
     pt.bench_machine_sweep_gate()
@@ -47,6 +51,7 @@ def main() -> None:
     pt.bench_transfer_matrix()
     pt.bench_machine_sensitivity()
     pt.bench_robustness_gate()
+    pt.bench_serving_gate()
     pt.bench_main_comparison()
     pt.bench_migrations()
     pt.bench_adaptivity()

@@ -14,7 +14,8 @@ from repro.launch.serve import serve
 arch = sys.argv[1] if len(sys.argv) > 1 else "granite-8b"
 tokens = int(sys.argv[2]) if len(sys.argv) > 2 else 64
 
-tok_s, promotions, fast_mass = serve(arch, n_tokens=tokens, batch=2)
+rep = serve(arch, n_tokens=tokens, batch=2)
+fast_mass = rep.fast_mass
 print(f"\nfast-tier attention-mass share over time: "
       f"{fast_mass[0]:.2f} -> {fast_mass[-1]:.2f}")
 assert fast_mass[-1] > 0.3, "ARMS should capture the hot attention mass"

@@ -150,6 +150,52 @@ class ARMSSpec(PolicySpec):
         return state, promote, demote
 
 
+@pytree_dataclass(meta=("cfg_names", "base_cfg", "pool_every"))
+class ARMSServeSpec(ARMSSpec):
+    """ARMS exactly as the pre-refactor serving layer ran it.
+
+    The serving pools (tiering/tiered_pool.py) historically called
+    ``core.arms_step`` directly: RAW accumulated counts (no per-interval
+    normalization), a FIXED ``policy_every`` cadence (not the
+    mode-dependent 5/1 simulator cadence), and no §4.3 migration-cost
+    feedback.  This spec reproduces that path bit-for-bit through the
+    PolicySpec protocol — the legacy-equivalence regression in
+    tests/test_serving_protocol.py asserts plan-sequence equality against
+    a frozen copy of the old ``arms_step`` serving loop.  Use plain
+    ``ARMSSpec`` for simulator sweeps; use this inside serving pools.
+    """
+
+    pool_every: int = 8
+
+    name = "arms"
+    dynamic_sampling_period = False
+
+    @classmethod
+    def make_serving(cls, base_cfg: ARMSConfig, pool_every: int,
+                     overrides: dict | None = None) -> "ARMSServeSpec":
+        spec = cls.make(overrides, base_cfg=base_cfg)
+        return dataclasses.replace(spec, pool_every=int(pool_every))
+
+    def fires(self, state):
+        # observe() increments t first, so the first fire lands on interval
+        # pool_every — the legacy ``kv.step % cfg.policy_every == 0`` gate.
+        return (state.t % self.pool_every) == 0
+
+    def sampling_period(self, state):
+        return jnp.float32(self.DEFAULT_SAMPLE_PERIOD)
+
+    def policy(self, state, slow_bw, app_bw, k):
+        # raw counts, no normalization, no migration-cost feedback: the
+        # legacy serving semantics (class docstring).
+        inner, plan = arms_step_impl(state.inner, state.buf, slow_bw,
+                                     app_bw, cfg=self.cfg(), k=k)
+        promote = jnp.where(plan.valid, plan.promote, -1).astype(jnp.int32)
+        demote = jnp.where(plan.valid & (plan.demote >= 0), plan.demote,
+                           -1).astype(jnp.int32)
+        state = state.replace(inner=inner, buf=jnp.zeros_like(state.buf))
+        return state, promote, demote
+
+
 class ARMSPolicy(Policy):
     name = "arms"
 

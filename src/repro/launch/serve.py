@@ -1,17 +1,29 @@
-"""Serving launcher with ARMS-tiered paged KV cache (deliverable b).
+"""Serving launcher with a policy-tiered paged KV cache (deliverable b).
 
 Runs batched greedy decoding for a (reduced by default) architecture with
-the attention KV cache paged across fast/slow tiers under the ARMS
-controller, and reports throughput + tiering telemetry (promotions, fast-
-tier hit mass — the paper's Fig. 8/10 signals at the serving layer).
+the attention KV cache paged across fast/slow tiers under ANY registered
+placement policy (``--policy``, every family in
+``experiment.POLICY_REGISTRY``), and reports throughput plus the SAME
+slowdown/thrash telemetry as the robustness leaderboard
+(benchmarks/bench_robustness.py): modeled tiered-vs-all-fast wall ratio,
+wasteful-migration fraction, promotions/demotions.
+
+Telemetry accumulates in a device-side carry (the TieredPool) and syncs
+ONCE after the decode loop; ``--sync-telemetry`` restores the legacy
+per-token host-sync path (kept for the before/after tok/s comparison in
+benchmarks/bench_serving.py).  ``--capture`` saves the per-interval
+paged-KV attention-mass stream as a replayable ``TraceWorkload``
+(simulator/traces.py) — the capture->fit pipeline that turns serving
+traffic into sweep/tuning/leaderboard lanes.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch granite-8b \
-      --tokens 96 --batch 4
+      --tokens 96 --batch 4 --policy memtis
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -21,10 +33,31 @@ import numpy as np
 from repro.configs import registry
 from repro.models import model as M
 from repro.tiering import paged_kv as PK
+from repro.tiering import tiered_pool as TP
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """One serving run's throughput + leaderboard-style telemetry."""
+    arch: str
+    policy: str
+    tok_s: float
+    promotions: int
+    demotions: int
+    wasteful: int
+    thrash: float            # wasteful / migrations (leaderboard metric)
+    slowdown: float          # modeled tiered wall / all-fast wall
+    fast_mass: np.ndarray    # [T] fast-tier attention-mass share per step
+    telemetry: dict          # full tiered_pool.telemetry record
+    trace: object = None     # TraceWorkload when capture=True
+    kv: object = None        # final PagedKV (tests inspect the pools)
 
 
 def serve(arch: str, n_tokens: int, batch: int, full: bool = False,
-          page_size: int = 16, fast_frac: float = 0.25, seed: int = 0):
+          page_size: int = 16, fast_frac: float = 0.25, seed: int = 0,
+          policy: str = "arms", machine: str = TP.DEFAULT_MACHINE,
+          sync_telemetry: bool = False, capture: bool = False,
+          quiet: bool = False) -> ServeReport:
     cfg = registry.get_arch(arch)
     if not full:
         cfg = registry.reduced(cfg)
@@ -37,51 +70,104 @@ def serve(arch: str, n_tokens: int, batch: int, full: bool = False,
     n_pages = max(4, -(-n_tokens // page_size))
     pk_cfg = PK.PagedKVConfig(
         page_size=page_size, n_pages=n_pages,
-        fast_pages=max(1, int(n_pages * fast_frac)), policy_every=4)
+        fast_pages=max(1, int(n_pages * fast_frac)), policy_every=4,
+        machine=machine)
 
     # one tiered paged-KV per attention layer is the production layout;
     # for the driver we tier layer 0 and use the model decode for the rest
     # of the stack (keeps the example readable).
     kv = PK.init_paged_kv(pk_cfg, batch, cfg.n_kv_heads, cfg.head_dim,
-                          dtype=jnp.float32)
+                          dtype=jnp.float32, policy=policy)
     cache = M.init_cache(cfg, batch, n_pages * page_size)
 
     token = jnp.zeros((batch, 1), jnp.int32)
     t0 = time.time()
-    promotions = 0
-    fast_mass = []
+    promotions_sync = 0
+    shares = []    # device scalars; one transfer after the loop
+    masses = []    # device [n_pages] access rows (trace capture)
+    # long-EWMA attention mass (the legacy fast-mass telemetry): the
+    # share of DECAYED mass resident fast, not just this step's slice.
+    mass_ewma = jnp.zeros((n_pages,), jnp.float32)
     for t in range(n_tokens):
         logits, cache = M.decode_step(params, token, cache, jnp.int32(t),
                                       cfg)
         token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        # drive the tiered layer with this step's q/k/v telemetry
-        q = jax.random.normal(jax.random.fold_in(rng, t),
+        # drive the tiered layer with this step's q/k/v telemetry; K and V
+        # are DISTINCT streams (the pools must be allowed to diverge).
+        q = jax.random.normal(jax.random.fold_in(rng, 3 * t),
                               (batch, cfg.n_heads, cfg.head_dim))
-        k_new = jax.random.normal(jax.random.fold_in(rng, 2 * t),
+        k_new = jax.random.normal(jax.random.fold_in(rng, 3 * t + 1),
                                   (batch, cfg.n_kv_heads, cfg.head_dim))
-        _, kv, plan = PK.serve_decode_step(kv, q, k_new, k_new,
+        v_new = jax.random.normal(jax.random.fold_in(rng, 3 * t + 2),
+                                  (batch, cfg.n_kv_heads, cfg.head_dim))
+        _, kv, plan = PK.serve_decode_step(kv, q, k_new, v_new,
                                            jnp.int32(t), pk_cfg)
-        promotions += int(plan.count)
-        hot_mass = float(jnp.where(kv.in_fast, kv.arms.ewma_l, 0.0).sum())
-        tot_mass = float(kv.arms.ewma_l.sum())
-        fast_mass.append(hot_mass / max(tot_mass, 1e-9))
+        mass_ewma = 0.98 * mass_ewma + plan.access
+        shares.append((mass_ewma * kv.pool.in_fast).sum()
+                      / jnp.maximum(mass_ewma.sum(), 1e-9))
+        if capture:
+            masses.append(plan.access)
+        if sync_telemetry:
+            # legacy per-token host-sync path (perf comparison only)
+            promotions_sync += int(plan.count)
+            float(plan.fast_share)
+    jax.block_until_ready(kv.pool)
     dt = time.time() - t0
     tok_s = n_tokens * batch / dt
-    print(f"[serve] {arch}: {n_tokens} steps x {batch} seqs = "
-          f"{tok_s:,.0f} tok/s")
-    print(f"[serve] tiering: {promotions} page promotions, "
-          f"fast-tier attention-mass share (end) = {fast_mass[-1]:.2%}")
-    return tok_s, promotions, fast_mass
+
+    tele = TP.telemetry(kv.pool)                   # the one host sync
+    fast_mass = np.asarray(jnp.stack(shares))
+    trace = None
+    if capture:
+        from repro.simulator import traces
+        trace = traces.capture_from_steps(
+            np.asarray(jnp.stack(masses)), group=pk_cfg.policy_every,
+            label=f"{arch}-kv")
+    if sync_telemetry:
+        assert promotions_sync == tele["promotions"]
+    rep = ServeReport(
+        arch=arch, policy=str(policy), tok_s=tok_s,
+        promotions=tele["promotions"], demotions=tele["demotions"],
+        wasteful=tele["wasteful"], thrash=tele["thrash"],
+        slowdown=tele["slowdown"], fast_mass=fast_mass,
+        telemetry=tele, trace=trace, kv=kv)
+    if not quiet:
+        print(f"[serve] {arch}/{rep.policy}: {n_tokens} steps x {batch} "
+              f"seqs = {tok_s:,.0f} tok/s"
+              + (" (sync telemetry)" if sync_telemetry else ""))
+        print(f"[serve] tiering: {rep.promotions} promotions / "
+              f"{rep.demotions} demotions, thrash={rep.thrash:.3f}, "
+              f"modeled slowdown vs all-fast = {rep.slowdown:.2f}x, "
+              f"fast-tier attention-mass share (end) = "
+              f"{fast_mass[-1]:.2%}")
+    return rep
 
 
 def main():
+    from repro.simulator.experiment import POLICY_REGISTRY
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--tokens", type=int, default=64)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--policy", default="arms",
+                    choices=sorted(POLICY_REGISTRY))
+    ap.add_argument("--machine", default=TP.DEFAULT_MACHINE)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sync-telemetry", action="store_true",
+                    help="legacy per-token host-sync telemetry (slow)")
+    ap.add_argument("--capture", default=None, metavar="PATH",
+                    help="save the paged-KV access trace as an .npz "
+                         "TraceWorkload")
     args = ap.parse_args()
-    serve(args.arch, args.tokens, args.batch, full=args.full)
+    rep = serve(args.arch, args.tokens, args.batch, full=args.full,
+                policy=args.policy, machine=args.machine, seed=args.seed,
+                sync_telemetry=args.sync_telemetry,
+                capture=args.capture is not None)
+    if args.capture:
+        rep.trace.save(args.capture)
+        print(f"[serve] trace [{rep.trace.T}x{rep.trace.n}] -> "
+              f"{args.capture}")
 
 
 if __name__ == "__main__":

@@ -18,13 +18,28 @@ paper's Table 3 rows in machine.py):
     CXL setting);
   * ``dram-cxl-pmem`` — three-tier chain: DRAM (capacity k), CXL
     expander (capacity 2k), PMem bottom (unbounded) — the multi-tier
-    thrashing topology of Jenga's analysis.
+    thrashing topology of Jenga's analysis;
+  * ``hbm-pcie``  — accelerator HBM over host memory via PCIe: the
+    serving-layer topology (paged-KV / expert slabs / embedding blocks,
+    tiering/tiered_pool.py), tier-0 bandwidth pinned to the roofline's
+    HBM constant so the serving cost model and roofline agree.
 """
 from __future__ import annotations
 
+from repro import roofline
 from repro.simulator import machine as machine_mod
 from repro.simulator import machine_spec
 from repro.simulator.machine_spec import TieredMachineSpec
+
+# Serving topology: accelerator HBM (tier 0, the roofline's memory-bound
+# bandwidth — src/repro/roofline.py) over host memory reached through PCIe
+# (~25 GB/s, the expert-slab latency budget in tiering/expert_tiering.py).
+# This is the machine the TieredPool serving cost model charges against.
+HBM_PCIE = machine_spec.make(
+    "hbm-pcie",
+    lat_ns=[120.0, 900.0],
+    bw_read=[roofline.HBM_BW, 25e9],
+    bw_write=[roofline.HBM_BW, 25e9])
 
 CXL_1HOP = machine_spec.make(
     "cxl-1hop",
@@ -44,6 +59,7 @@ REGISTRY: dict[str, TieredMachineSpec] = {
        for nm, m in machine_mod.MACHINES.items()},
     "cxl-1hop": CXL_1HOP,
     "dram-cxl-pmem": DRAM_CXL_PMEM,
+    "hbm-pcie": HBM_PCIE,
 }
 
 

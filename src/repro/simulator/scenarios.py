@@ -28,10 +28,11 @@ from __future__ import annotations
 
 from repro.simulator.workload_spec import (DEFAULT_WORK, KIND_HOTSET,
                                            WorkloadSpec, _comp, _from_comps,
-                                           drift, with_label)
+                                           _to_comps, drift, with_label)
 
 __all__ = ["capacity_straddle", "phase_flip", "drifting_hot",
-           "duty_cycled_tenants", "suite", "STRADDLE_RATIOS"]
+           "duty_cycled_tenants", "serving_mix", "suite",
+           "STRADDLE_RATIOS"]
 
 STRADDLE_RATIOS = (0.9, 1.0, 1.1)
 
@@ -103,6 +104,43 @@ def duty_cycled_tenants(n: int, k: int, tenants: int = 3, period: int = 60,
     return with_label(_from_comps(comps), f"tenants-{tenants}")
 
 
+def serving_mix(n: int, k: int, tenants: int = 4, period: int = 48,
+                specs: list[WorkloadSpec] | None = None,
+                work: float = DEFAULT_WORK, seed: int = 53) -> WorkloadSpec:
+    """Multi-tenant serving traffic: ``tenants`` request streams x
+    staggered request phases.
+
+    Each tenant's access shape comes from ``specs`` — typically
+    ``traces.fit_workload_spec`` outputs captured from real serving runs
+    (benchmarks/bench_serving.py wires the live capture->fit->scenario
+    path); with ``specs=None`` the defaults stand in for the fitted
+    archetypes (chat-style concentrated KV reuse, wider churning RAG
+    context, bursty MoE routing).  Tenants are duty-cycled onto staggered
+    request phases (one tenant's burst at a time, ``duty_cycled_tenants``
+    style) with per-tenant work scaled so aggregate load matches ``work``
+    — pressure on the fast tier is a rotating schedule of heterogeneous
+    hot sets, the serving-loop pathology the leaderboard scores.
+    """
+    tenants = max(int(tenants), 2)
+    period = max(int(period), tenants)
+    slot = period // tenants
+    if specs is None:
+        specs = [_from_comps([_comp(
+            KIND_HOTSET, work=work,
+            hot_frac=_hot_frac((0.5 + 0.25 * (i % 3)) * k, n),
+            hot_weight=0.92, shift_every=80 + 40 * i, seed=seed + 7 * i)])
+            for i in range(tenants)]
+    comps = []
+    for i in range(tenants):
+        for c in _to_comps(specs[i % len(specs)]):
+            c = dict(c, work=c["work"] / tenants, period=period,
+                     duty=slot / period, phase_off=period - i * slot,
+                     idle_scale=min(c.get("idle_scale", 1.0), 0.05),
+                     seed=c["seed"] + 131 * i)
+            comps.append(c)
+    return with_label(_from_comps(comps), f"serving-mix-{tenants}")
+
+
 def suite(n: int, k: int, work: float = DEFAULT_WORK) -> list[WorkloadSpec]:
     """The adversarial scenario suite for a run geometry — the workload
     axis of the robustness leaderboard."""
@@ -110,4 +148,5 @@ def suite(n: int, k: int, work: float = DEFAULT_WORK) -> list[WorkloadSpec]:
              for r in STRADDLE_RATIOS]
             + [phase_flip(n, k, work=work),
                drifting_hot(n, k, work=work),
-               duty_cycled_tenants(n, k, work=work)])
+               duty_cycled_tenants(n, k, work=work),
+               serving_mix(n, k, work=work)])

@@ -1,10 +1,18 @@
-"""ARMS-tiered embedding rows (DESIGN.md §2, integration 3).
+"""Policy-tiered embedding rows (DESIGN.md §2 integration 3, §10).
 
 Pages = blocks of vocabulary rows (row_block rows).  Access counts = token
 frequency histograms from the data pipeline / request stream — Zipfian in
 practice, so a small HBM-resident hot set serves almost all lookups (the
 202k-row llama4 table at bf16 x 5120 is ~2 GB per replica; the hot 10%
-covers >95% of tokens)."""
+covers >95% of tokens).
+
+Placement runs through the shared ``tiered_pool`` executor (any
+``experiment.POLICY_REGISTRY`` family; default ARMS with the legacy
+serving semantics).  It is metadata-only here: the home table is
+authoritative and the fast tier is a cache of blocks, so the pool moves no
+buffers (``bufs=()``) — residency just prices lookups via the measured
+per-tier read volumes (rows touched x row bytes, split by block tier).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -12,8 +20,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import ARMSConfig, TieringState, arms_step
-from repro.core import init_state as arms_init
+from repro.core import ARMSConfig
+from repro.tiering import tiered_pool as TP
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +36,7 @@ class EmbedTierConfig:
                                   latency_slow_us=100.0,
                                   init_promo_cost_us=20.0,
                                   init_demo_cost_us=20.0)
+    machine: str = TP.DEFAULT_MACHINE
 
     @property
     def n_blocks(self) -> int:
@@ -37,23 +46,40 @@ class EmbedTierConfig:
 @dataclasses.dataclass(frozen=True)
 class EmbedTier:
     table: jnp.ndarray       # [V, D] home copy (slow tier)
-    in_fast: jnp.ndarray     # [n_blocks] bool
-    counts: jnp.ndarray      # [n_blocks] f32
-    arms: TieringState
-    step: jnp.ndarray
+    pool: TP.TieredPool
+
+    @property
+    def in_fast(self):
+        return self.pool.in_fast
+
+    @property
+    def counts(self):
+        return self.pool.counts
+
+    @property
+    def step(self):
+        return self.pool.t
+
+    @property
+    def arms(self):
+        return self.pool.state.inner
 
 
 jax.tree_util.register_dataclass(
-    EmbedTier, data_fields=["table", "in_fast", "counts", "arms", "step"],
-    meta_fields=[])
+    EmbedTier, data_fields=["table", "pool"], meta_fields=[])
 
 
-def init_embed_tier(cfg: EmbedTierConfig, table) -> EmbedTier:
-    return EmbedTier(table=table,
-                     in_fast=jnp.zeros((cfg.n_blocks,), bool),
-                     counts=jnp.zeros((cfg.n_blocks,), jnp.float32),
-                     arms=arms_init(cfg.n_blocks, cfg.arms),
-                     step=jnp.zeros((), jnp.int32))
+def block_bytes(t: EmbedTier, cfg: EmbedTierConfig) -> float:
+    """Bytes of one row block — the migration-traffic unit."""
+    return float(cfg.row_block * t.table.shape[1] * t.table.dtype.itemsize)
+
+
+def init_embed_tier(cfg: EmbedTierConfig, table,
+                    policy="arms") -> EmbedTier:
+    pool = TP.init_pool(policy, cfg.n_blocks, cfg.fast_blocks,
+                        machine=cfg.machine, arms_cfg=cfg.arms,
+                        pool_every=cfg.policy_every)
+    return EmbedTier(table=table, pool=pool)
 
 
 def lookup(t: EmbedTier, ids, cfg: EmbedTierConfig):
@@ -65,16 +91,17 @@ def lookup(t: EmbedTier, ids, cfg: EmbedTierConfig):
     hist = jnp.zeros((cfg.n_blocks,), jnp.float32).at[
         blocks.reshape(-1)].add(1.0)
     hits = t.in_fast[blocks].mean()
-    t = dataclasses.replace(t, counts=t.counts + hist, step=t.step + 1)
-    return emb, hits, t
+    row_b = float(t.table.shape[1] * t.table.dtype.itemsize)
+    rf = (hist * t.in_fast).sum() * row_b
+    rs = (hist * ~t.in_fast).sum() * row_b
+    pool = TP.pool_observe(t.pool, hist, rf, rs)
+    return emb, hits, dataclasses.replace(t, pool=pool)
 
 
 def policy(t: EmbedTier, cfg: EmbedTierConfig):
-    slow_frac = jnp.where(t.in_fast, 0.0, t.counts).sum() / \
-        jnp.maximum(t.counts.sum(), 1e-9)
-    arms, plan = arms_step(t.arms, t.counts, slow_frac, 0.5, cfg=cfg.arms,
-                           k=cfg.fast_blocks)
-    # placement is metadata-only here: the home table is authoritative and
-    # the fast tier is a cache of blocks (no copies needed for correctness)
-    return dataclasses.replace(t, arms=arms, in_fast=arms.in_fast,
-                               counts=jnp.zeros_like(t.counts)), plan
+    """Run the placement policy if due (``policy_every`` lookups since the
+    last pass).  Metadata-only — no block copies (module docstring)."""
+    pool, _, plan = TP.pool_fire(
+        t.pool, k=cfg.fast_blocks, bufs=(), copy_back=False,
+        page_bytes=block_bytes(t, cfg))
+    return dataclasses.replace(t, pool=pool), plan

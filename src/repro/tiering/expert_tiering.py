@@ -1,10 +1,18 @@
-"""ARMS-tiered MoE expert weights (DESIGN.md §2, integration 2).
+"""Policy-tiered MoE expert weights (DESIGN.md §2 integration 2, §10).
 
 Pages = expert weight slabs.  Access counts = router load (tokens dispatched
-per expert per step) — exact, not sampled.  The ARMS controller keeps the
-hot experts' slabs HBM-resident (fast pool of k slots) and the long tail in
-host memory; hot-age filtering suppresses thrash from bursty routing (the
-paper's one-hit wonders, §4.3).
+per expert per step) — exact, not sampled.  The placement policy (default
+ARMS, any ``experiment.POLICY_REGISTRY`` family via the shared
+``tiered_pool`` executor) keeps the hot experts' slabs HBM-resident (fast
+pool of k slots) and the long tail in host memory; hot-age filtering
+suppresses thrash from bursty routing (the paper's one-hit wonders, §4.3).
+
+The slow pool always holds the home copy of every expert, so demotion is
+metadata-only (``copy_back=False``); promotion copies the slab up.  The
+measured per-tier read volume — the bytes ``effective_weights`` pulls from
+each pool for the experts actually dispatched — feeds the pool's
+application-bandwidth signal (the satellite-3 fix for the old hardcoded
+``app_bw_frac=0.5``).
 """
 from __future__ import annotations
 
@@ -13,8 +21,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import ARMSConfig, TieringState, arms_step
-from repro.core import init_state as arms_init
+from repro.core import ARMSConfig
+from repro.tiering import tiered_pool as TP
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +37,7 @@ class ExpertTierConfig:
                                   latency_slow_us=1900.0,
                                   init_promo_cost_us=200.0,
                                   init_demo_cost_us=200.0, bs_max=8)
+    machine: str = TP.DEFAULT_MACHINE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,32 +46,59 @@ class ExpertTier:
     wo_fast: jnp.ndarray     # [Kf, F, D]
     wi_slow: jnp.ndarray     # [E, D, 2F]  (home copy of every expert)
     wo_slow: jnp.ndarray     # [E, F, D]
-    in_fast: jnp.ndarray     # [E] bool
-    slot: jnp.ndarray        # [E] i32 fast-pool slot (valid when in_fast)
-    counts: jnp.ndarray      # [E] f32 accumulated router load
-    arms: TieringState
-    step: jnp.ndarray
+    pool: TP.TieredPool
+
+    @property
+    def in_fast(self):
+        return self.pool.in_fast
+
+    @property
+    def slot(self):
+        return self.pool.slot
+
+    @property
+    def counts(self):
+        return self.pool.counts
+
+    @property
+    def step(self):
+        return self.pool.t
+
+    @property
+    def arms(self):
+        return self.pool.state.inner
 
 
 jax.tree_util.register_dataclass(
     ExpertTier,
-    data_fields=["wi_fast", "wo_fast", "wi_slow", "wo_slow", "in_fast",
-                 "slot", "counts", "arms", "step"],
+    data_fields=["wi_fast", "wo_fast", "wi_slow", "wo_slow", "pool"],
     meta_fields=[])
 
 
-def init_expert_tier(cfg: ExpertTierConfig, wi, wo) -> ExpertTier:
+def expert_slab_bytes(t: ExpertTier) -> float:
+    """Bytes of one expert's (wi, wo) slab — the per-tier read-volume and
+    migration-traffic unit."""
+    wi = 1
+    for d in t.wi_slow.shape[1:]:
+        wi *= d
+    wo = 1
+    for d in t.wo_slow.shape[1:]:
+        wo *= d
+    return float(wi * t.wi_slow.dtype.itemsize
+                 + wo * t.wo_slow.dtype.itemsize)
+
+
+def init_expert_tier(cfg: ExpertTierConfig, wi, wo,
+                     policy="arms") -> ExpertTier:
     E = cfg.n_experts
     Kf = cfg.fast_experts
+    pool = TP.init_pool(policy, E, Kf, machine=cfg.machine,
+                        arms_cfg=cfg.arms, pool_every=cfg.policy_every)
     return ExpertTier(
         wi_fast=jnp.zeros((Kf,) + wi.shape[1:], wi.dtype),
         wo_fast=jnp.zeros((Kf,) + wo.shape[1:], wo.dtype),
         wi_slow=wi, wo_slow=wo,
-        in_fast=jnp.zeros((E,), bool),
-        slot=jnp.zeros((E,), jnp.int32),
-        counts=jnp.zeros((E,), jnp.float32),
-        arms=arms_init(E, cfg.arms),
-        step=jnp.zeros((), jnp.int32))
+        pool=pool)
 
 
 def effective_weights(t: ExpertTier):
@@ -75,65 +111,24 @@ def effective_weights(t: ExpertTier):
     return wi, wo
 
 
+def read_volumes(t: ExpertTier, expert_load):
+    """(fast_bytes, slow_bytes) for one step: each DISPATCHED expert
+    (load > 0) reads its slab once from its tier."""
+    hit = expert_load > 0
+    sb = expert_slab_bytes(t)
+    fast = (hit & t.in_fast).sum().astype(jnp.float32) * sb
+    slow = (hit & ~t.in_fast).sum().astype(jnp.float32) * sb
+    return fast, slow
+
+
 def observe_and_policy(t: ExpertTier, expert_load, cfg: ExpertTierConfig):
-    """Accumulate router load; periodically run ARMS and execute the plan."""
-    t = dataclasses.replace(t, counts=t.counts + expert_load,
-                            step=t.step + 1)
-    slow_frac = jnp.where(t.in_fast, 0.0, t.counts).sum() / \
-        jnp.maximum(t.counts.sum(), 1e-9)
-
-    def policy(t):
-        arms, plan = arms_step(t.arms, t.counts, slow_frac, 0.5,
-                               cfg=cfg.arms, k=cfg.fast_experts)
-        t = _apply(t, plan)
-        return dataclasses.replace(t, arms=arms,
-                                   counts=jnp.zeros_like(t.counts)), plan
-
-    def skip(t):
-        bs = min(cfg.arms.bs_max, cfg.n_experts)
-        from repro.core import MigrationPlan
-        return t, MigrationPlan(promote=jnp.full((bs,), -1, jnp.int32),
-                                demote=jnp.full((bs,), -1, jnp.int32),
-                                valid=jnp.zeros((bs,), bool),
-                                count=jnp.zeros((), jnp.int32),
-                                batch_size=jnp.zeros((), jnp.int32))
-
-    return jax.lax.cond(t.step % cfg.policy_every == 0, policy, skip, t)
-
-
-def _apply(t: ExpertTier, plan):
-    Kf = t.wi_fast.shape[0]
-    E = t.in_fast.shape[0]
-
-    def body(state, entry):
-        wi_f, wo_f, in_fast, slot = state
-        p, d, valid = entry
-        p_c = jnp.clip(p, 0, E - 1)
-        d_c = jnp.clip(d, 0, E - 1)
-        has_victim = d >= 0
-        used = jnp.minimum(in_fast.sum(), Kf - 1).astype(jnp.int32)
-        f_slot = jnp.clip(jnp.where(has_victim, slot[d_c], used), 0, Kf - 1)
-
-        def run(args):
-            wi_f, wo_f, in_fast, slot = args
-            # demotion is free: the slow pool always holds the home copy
-            wi_f = jax.lax.dynamic_update_slice_in_dim(
-                wi_f, jax.lax.dynamic_slice_in_dim(t.wi_slow, p_c, 1, 0),
-                f_slot, 0)
-            wo_f = jax.lax.dynamic_update_slice_in_dim(
-                wo_f, jax.lax.dynamic_slice_in_dim(t.wo_slow, p_c, 1, 0),
-                f_slot, 0)
-            in_fast = in_fast.at[d_c].set(
-                jnp.where(has_victim, False, in_fast[d_c]))
-            in_fast = in_fast.at[p_c].set(True)
-            slot = slot.at[p_c].set(f_slot)
-            return wi_f, wo_f, in_fast, slot
-
-        return jax.lax.cond(valid, run, lambda a: a,
-                            (wi_f, wo_f, in_fast, slot)), None
-
-    (wi_f, wo_f, in_fast, slot), _ = jax.lax.scan(
-        body, (t.wi_fast, t.wo_fast, t.in_fast, t.slot),
-        (plan.promote, plan.demote, plan.valid))
-    return dataclasses.replace(t, wi_fast=wi_f, wo_fast=wo_f,
-                               in_fast=in_fast, slot=slot)
+    """Accumulate router load; periodically run the policy and execute the
+    plan via the shared pool executor.  Returns (tier, PoolPlan)."""
+    rf, rs = read_volumes(t, expert_load)
+    pool, bufs, plan = TP.pool_step(
+        t.pool, expert_load, rf, rs, k=cfg.fast_experts,
+        bufs=((t.wi_fast, t.wi_slow), (t.wo_fast, t.wo_slow)),
+        copy_back=False, page_bytes=expert_slab_bytes(t))
+    (wi_f, _), (wo_f, _) = bufs
+    t = dataclasses.replace(t, wi_fast=wi_f, wo_fast=wo_f, pool=pool)
+    return t, plan

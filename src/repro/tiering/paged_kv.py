@@ -1,4 +1,4 @@
-"""ARMS-tiered paged KV cache (DESIGN.md §2, integration 1).
+"""Policy-tiered paged KV cache (DESIGN.md §2 integration 1, §10).
 
 The KV cache is split into fixed-size token pages living in one of two
 pools: the FAST pool (HBM) and the SLOW pool (host memory over PCIe; on
@@ -9,10 +9,11 @@ maps each logical page to (tier, slot).  Per decode step:
   2. the per-page ACCESS SIGNAL is the attention mass the page received
      (the KV analogue of the paper's PEBS counts — pages whose keys win
      softmax weight are the hot set);
-  3. every ``policy_every`` steps the ARMS controller (core/) scores pages
-     and emits a bandwidth-aware batched migration plan;
-  4. the plan executes via the batched-migration Pallas kernel
-     (kernels/migrate) on both pools.
+  3. the per-tier READ VOLUMES (the bytes ``_gather_kv`` pulls from each
+     pool) feed the measured bandwidth signals;
+  4. every ``policy_every`` steps the placement policy — ANY family in
+     ``experiment.POLICY_REGISTRY``, default ARMS — scores pages and the
+     shared ``tiered_pool`` executor migrates both pools.
 
 Invariant: every logical page lives in exactly one pool slot; fast-pool
 capacity is k pages — exactly the paper's top-k classification target.
@@ -25,9 +26,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import ARMSConfig, MigrationPlan, TieringState, arms_step
-from repro.core import init_state as arms_init
-from repro.kernels.migrate.ref import migrate_ref
+from repro.core import ARMSConfig
+from repro.tiering import tiered_pool as TP
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,13 +35,14 @@ class PagedKVConfig:
     page_size: int = 64
     n_pages: int = 64            # logical pages per sequence-group
     fast_pages: int = 16         # fast-pool capacity (k)
-    policy_every: int = 8        # decode steps between ARMS invocations
+    policy_every: int = 8        # decode steps between policy invocations
     # dLatency: a KV page streamed over PCIe vs HBM; one access = one unit
     # of attention mass landing on the page in a decode step.
     arms: ARMSConfig = ARMSConfig(access_scale=1.0, latency_fast_us=1.0,
                                   latency_slow_us=30.0,
                                   init_promo_cost_us=5.0,
                                   init_demo_cost_us=5.0)
+    machine: str = TP.DEFAULT_MACHINE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,35 +52,69 @@ class PagedKV:
     v_fast: jnp.ndarray
     k_slow: jnp.ndarray      # [Ps, page, B, KV, dh]
     v_slow: jnp.ndarray
-    in_fast: jnp.ndarray     # [n_pages] bool — tier of each logical page
-    slot: jnp.ndarray        # [n_pages] i32 — slot within its tier pool
-    counts: jnp.ndarray      # [n_pages] f32 — accumulated attention mass
-    arms: TieringState
-    step: jnp.ndarray        # i32
+    pool: TP.TieredPool      # residency + policy state + telemetry
+
+    # residency metadata delegates to the pool (sparse_attention.py and
+    # the tests read these directly; the pool is the single source).
+    @property
+    def in_fast(self):
+        return self.pool.in_fast
+
+    @property
+    def slot(self):
+        return self.pool.slot
+
+    @property
+    def counts(self):
+        return self.pool.counts
+
+    @property
+    def step(self):
+        return self.pool.t
+
+    @property
+    def arms(self):
+        """Inner ARMS TieringState when an ARMS-family policy drives the
+        pool (legacy telemetry accessor)."""
+        return self.pool.state.inner
 
 
 jax.tree_util.register_dataclass(
     PagedKV,
-    data_fields=["k_fast", "v_fast", "k_slow", "v_slow", "in_fast", "slot",
-                 "counts", "arms", "step"],
+    data_fields=["k_fast", "v_fast", "k_slow", "v_slow", "pool"],
     meta_fields=[])
 
 
 def init_paged_kv(cfg: PagedKVConfig, bsz: int, kv_heads: int, head_dim: int,
-                  dtype=jnp.bfloat16) -> PagedKV:
+                  dtype=jnp.bfloat16, policy="arms") -> PagedKV:
+    """``policy``: a family name from ``experiment.POLICY_REGISTRY`` or a
+    PolicySpec instance; ``"arms"`` keeps the legacy serving semantics."""
     page, n, pf = cfg.page_size, cfg.n_pages, cfg.fast_pages
-    ps = n  # slow pool can hold every page
+    ps = n  # slow pool can hold every page (home slot = logical id)
     shape_f = (pf, page, bsz, kv_heads, head_dim)
     shape_s = (ps, page, bsz, kv_heads, head_dim)
-    # initial placement: all pages in the slow pool, slot = logical id
+    pool = TP.init_pool(policy, n, pf, machine=cfg.machine,
+                        arms_cfg=cfg.arms, pool_every=cfg.policy_every)
     return PagedKV(
         k_fast=jnp.zeros(shape_f, dtype), v_fast=jnp.zeros(shape_f, dtype),
         k_slow=jnp.zeros(shape_s, dtype), v_slow=jnp.zeros(shape_s, dtype),
-        in_fast=jnp.zeros((n,), bool),
-        slot=jnp.arange(n, dtype=jnp.int32),
-        counts=jnp.zeros((n,), jnp.float32),
-        arms=arms_init(n, cfg.arms),
-        step=jnp.zeros((), jnp.int32))
+        pool=pool)
+
+
+def with_residency(kv: PagedKV, in_fast) -> PagedKV:
+    """Override the residency mask (tests / sparse-attention what-ifs);
+    slots and pool state are left as-is."""
+    return dataclasses.replace(
+        kv, pool=kv.pool.replace(in_fast=jnp.asarray(in_fast, bool)))
+
+
+def page_kv_bytes(kv: PagedKV) -> float:
+    """Bytes one K+V page occupies — the unit of the measured per-tier
+    read volumes and of migration traffic."""
+    page_elems = 1
+    for d in kv.k_slow.shape[1:]:
+        page_elems *= d
+    return float(2 * page_elems * kv.k_slow.dtype.itemsize)
 
 
 def _gather_kv(kv: PagedKV):
@@ -94,6 +129,17 @@ def _gather_kv(kv: PagedKV):
                   kv.v_fast[jnp.clip(kv.slot, 0, kv.v_fast.shape[0] - 1)],
                   kv.v_slow[kv.slot])
     return k, v
+
+
+def read_volumes(kv: PagedKV, pos, cfg: PagedKVConfig):
+    """(fast_bytes, slow_bytes) one decode step's ``_gather_kv`` pulls:
+    every valid page (holding tokens <= pos) is read once from its tier."""
+    n_valid = jnp.minimum(pos // cfg.page_size + 1, cfg.n_pages)
+    valid = jnp.arange(cfg.n_pages) < n_valid
+    pb = page_kv_bytes(kv)
+    fast = (valid & kv.in_fast).sum().astype(jnp.float32) * pb
+    slow = (valid & ~kv.in_fast).sum().astype(jnp.float32) * pb
+    return fast, slow
 
 
 def write_token(kv: PagedKV, k_new, v_new, pos, cfg: PagedKVConfig):
@@ -150,104 +196,21 @@ def paged_attention_step(kv: PagedKV, q, pos, cfg: PagedKVConfig,
     return out.reshape(B, H, dh), mass
 
 
-def arms_policy_step(kv: PagedKV, cfg: PagedKVConfig, slow_bw_frac,
-                     app_bw_frac):
-    """Run the ARMS controller over accumulated page counts and execute the
-    migration plan on the pools.  Returns (new_kv, plan)."""
-    arms, plan = arms_step(kv.arms, kv.counts, slow_bw_frac, app_bw_frac,
-                           cfg=cfg.arms, k=cfg.fast_pages)
-    kv = _execute_plan(kv, plan, arms)
-    return dataclasses.replace(kv, arms=arms,
-                               counts=jnp.zeros_like(kv.counts)), plan
-
-
-def _execute_plan(kv: PagedKV, plan: MigrationPlan, arms: TieringState):
-    """Move promoted pages slow->fast (into the demoted pages' slots or
-    free slots) and demoted pages fast->slow (back to their home slot —
-    slow slot = logical id, so demotion targets are always free)."""
-    Pf = kv.k_fast.shape[0]
-    n = kv.in_fast.shape[0]
-
-    def body(state, entry):
-        (kf, vf, ks, vs, in_fast, slot) = state
-        p_id, d_id, valid = entry
-        p_id_c = jnp.clip(p_id, 0, n - 1)
-        d_id_c = jnp.clip(d_id, 0, n - 1)
-        has_victim = d_id >= 0
-        # fast slot target: victim's slot, else count of used fast slots
-        used = jnp.minimum(in_fast.sum(), Pf - 1).astype(jnp.int32)
-        f_slot = jnp.where(has_victim, slot[d_id_c], used)
-        f_slot = jnp.clip(f_slot, 0, Pf - 1)
-
-        def run(args):
-            kf, vf, ks, vs, in_fast, slot = args
-            # demote victim: fast[f_slot] -> slow[d_id] (home slot)
-            kv_page_k = jax.lax.dynamic_slice_in_dim(kf, f_slot, 1, 0)
-            kv_page_v = jax.lax.dynamic_slice_in_dim(vf, f_slot, 1, 0)
-            ks = jax.lax.cond(
-                has_victim,
-                lambda: jax.lax.dynamic_update_slice_in_dim(
-                    ks, kv_page_k, d_id_c, 0),
-                lambda: ks)
-            vs = jax.lax.cond(
-                has_victim,
-                lambda: jax.lax.dynamic_update_slice_in_dim(
-                    vs, kv_page_v, d_id_c, 0),
-                lambda: vs)
-            # promote: slow[slot[p_id]] -> fast[f_slot]
-            src_k = jax.lax.dynamic_slice_in_dim(ks, slot[p_id_c], 1, 0)
-            src_v = jax.lax.dynamic_slice_in_dim(vs, slot[p_id_c], 1, 0)
-            kf = jax.lax.dynamic_update_slice_in_dim(kf, src_k, f_slot, 0)
-            vf = jax.lax.dynamic_update_slice_in_dim(vf, src_v, f_slot, 0)
-            in_fast = in_fast.at[d_id_c].set(
-                jnp.where(has_victim, False, in_fast[d_id_c]))
-            slot = slot.at[d_id_c].set(
-                jnp.where(has_victim, d_id_c, slot[d_id_c]))
-            in_fast = in_fast.at[p_id_c].set(True)
-            slot = slot.at[p_id_c].set(f_slot)
-            return kf, vf, ks, vs, in_fast, slot
-
-        state2 = jax.lax.cond(valid, run, lambda a: a,
-                              (kf, vf, ks, vs, in_fast, slot))
-        return state2, None
-
-    init = (kv.k_fast, kv.v_fast, kv.k_slow, kv.v_slow, kv.in_fast, kv.slot)
-    (kf, vf, ks, vs, in_fast, slot), _ = jax.lax.scan(
-        body, init, (plan.promote, plan.demote, plan.valid))
-    return dataclasses.replace(kv, k_fast=kf, v_fast=vf, k_slow=ks,
-                               v_slow=vs, in_fast=in_fast, slot=slot)
-
-
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def serve_decode_step(kv: PagedKV, q, k_new, v_new, pos,
                       cfg: PagedKVConfig):
     """Full tiered decode step for one attention layer:
-    write -> attend -> accumulate counts -> (periodically) ARMS policy.
+    write -> attend -> pool_step (observe + periodic policy + migration).
 
-    Returns (out, new_kv, MigrationPlan-with-count-0-when-skipped)."""
+    Returns (out, new_kv, PoolPlan-with-count-0-when-skipped)."""
     kv = write_token(kv, k_new, v_new, pos, cfg)
     out, mass = paged_attention_step(kv, q, pos, cfg)
-    kv = dataclasses.replace(kv, counts=kv.counts + mass,
-                             step=kv.step + 1)
-
-    # slow-tier bandwidth signal: attention mass served from slow pages
-    slow_mass = jnp.where(kv.in_fast, 0.0, kv.counts).sum() / \
-        jnp.maximum(kv.counts.sum(), 1e-9)
-
-    def policy(kv):
-        return arms_policy_step(kv, cfg, slow_mass, 0.5)
-
-    def skip(kv):
-        empty = MigrationPlan(
-            promote=jnp.full((min(cfg.arms.bs_max, cfg.n_pages),), -1,
-                             jnp.int32),
-            demote=jnp.full((min(cfg.arms.bs_max, cfg.n_pages),), -1,
-                            jnp.int32),
-            valid=jnp.zeros((min(cfg.arms.bs_max, cfg.n_pages),), bool),
-            count=jnp.zeros((), jnp.int32),
-            batch_size=jnp.zeros((), jnp.int32))
-        return kv, empty
-
-    kv, plan = jax.lax.cond(kv.step % cfg.policy_every == 0, policy, skip,
-                            kv)
+    rf, rs = read_volumes(kv, pos, cfg)
+    pool, bufs, plan = TP.pool_step(
+        kv.pool, mass, rf, rs, k=cfg.fast_pages,
+        bufs=((kv.k_fast, kv.k_slow), (kv.v_fast, kv.v_slow)),
+        copy_back=True, page_bytes=page_kv_bytes(kv))
+    (kf, ks), (vf, vs) = bufs
+    kv = dataclasses.replace(kv, k_fast=kf, k_slow=ks, v_fast=vf,
+                             v_slow=vs, pool=pool)
     return out, kv, plan

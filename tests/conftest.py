@@ -3,6 +3,20 @@ import warnings
 import pytest
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bound_live_executables():
+    """The full suite compiles enough XLA programs in one process that
+    the CPU backend eventually segfaults inside ``backend_compile``
+    (LLVM state, not Python memory — reproducible around ~450 tests,
+    deterministic at whatever test crosses the threshold).  Dropping
+    compiled executables between modules keeps the live-program count
+    bounded; modules rarely share jit caches, so the recompile cost is
+    noise next to the crash it prevents."""
+    yield
+    import jax
+    jax.clear_caches()
+
+
 @pytest.fixture(autouse=True)
 def _quiet_donation_notice():
     """jit buffer donation is best-effort by shape; XLA's per-dispatch

@@ -20,9 +20,10 @@ class TestSuite:
     def test_suite_labels_and_shapes(self):
         suite = scenarios.suite(N, K)
         labels = [ws.label_of(s) for s in suite]
-        assert len(labels) == len(set(labels)) == 6
+        assert len(labels) == len(set(labels)) == 7
         assert labels[:3] == ["straddle-0.9x", "straddle-1x",
                               "straddle-1.1x"]
+        assert labels[-1] == "serving-mix-4"
         for s in suite:
             tr = np.asarray(s.materialize(T, N, seed=0))
             assert tr.shape == (T, N)
@@ -51,6 +52,43 @@ class TestPhaseFlip:
         for t in (0, 20, 40, 59):
             rates = np.asarray(td._rates(jnp.int32(t)))
             assert (rates > 0.5 * rates.max()).sum() == 1
+
+
+class TestServingMix:
+    def test_default_tenants_staggered(self):
+        sm = scenarios.serving_mix(N, K, tenants=4, period=48)
+        assert ws.label_of(sm) == "serving-mix-4"
+        tr = np.asarray(sm.materialize(96, N, seed=0))
+        assert np.isfinite(tr).all() and (tr >= 0).all()
+        # duty-cycled phases: exactly one tenant's burst dominates at a
+        # time, so the per-interval total stays within one tenant's band
+        totals = tr.sum(1)
+        assert totals.max() < 2.2 * np.median(totals[totals > 0])
+
+    def test_composes_fitted_specs(self):
+        """The capture->fit->scenario path: serving_mix accepts fitted
+        WorkloadSpecs (traces.fit_workload_spec outputs) as tenants."""
+        from repro.simulator import traces
+        rng = np.random.default_rng(0)
+        steps = rng.uniform(0.5, 1.5, (32, 16))
+        steps[:, :3] *= 80.0
+        fit = traces.fit_workload_spec(
+            traces.capture_from_steps(steps, group=2, label="kv"))
+        sm = scenarios.serving_mix(N, K, tenants=3, specs=[fit])
+        assert ws.label_of(sm) == "serving-mix-3"
+        comps = ws._to_comps(sm)
+        assert len(comps) == 3
+        # per-tenant work is split so aggregate load matches the fit
+        for c in comps:
+            assert c["idle_scale"] <= 0.05 + 1e-6
+        tr = np.asarray(sm.materialize(T, N, seed=0))
+        assert np.isfinite(tr).all()
+
+    def test_work_split_across_tenants(self):
+        sm = scenarios.serving_mix(N, K, tenants=4, work=8e6)
+        comps = ws._to_comps(sm)
+        np.testing.assert_allclose(sum(c["work"] for c in comps), 8e6,
+                                   rtol=1e-6)
 
 
 class TestDegenerateKnobs:

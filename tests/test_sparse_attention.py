@@ -60,7 +60,7 @@ def test_sparse_attends_fraction_shrinks_with_fast_tier():
     steps = CFG.page_size * CFG.n_pages
     small = dataclasses.replace(CFG, fast_pages=2)
     kv, qs = _drive_skewed(steps)
-    kv_small = dataclasses.replace(kv, in_fast=kv.in_fast & (
+    kv_small = PK.with_residency(kv, kv.in_fast & (
         jnp.cumsum(kv.in_fast.astype(jnp.int32)) <= 2))
     pos = jnp.int32(steps - 1)
     _, _, frac_big = sparse_attention_step(kv, qs[-1], pos, CFG)
@@ -72,7 +72,7 @@ def test_sink_and_recent_always_attended():
     steps = CFG.page_size * 4
     kv, qs = _drive_skewed(steps)
     # wipe residency: sparse must still include sink + recent pages
-    kv = dataclasses.replace(kv, in_fast=jnp.zeros_like(kv.in_fast))
+    kv = PK.with_residency(kv, jnp.zeros_like(kv.in_fast))
     pos = jnp.int32(steps - 1)
     out, _, frac = sparse_attention_step(kv, qs[-1], pos, CFG)
     assert bool(jnp.isfinite(out).all())

@@ -1,0 +1,165 @@
+"""Trace capture / fit / replay (PR 9 tentpole layer 2, satellite d).
+
+* Capture round-trip conserves total access counts EXACTLY (f64 +
+  reduceat grouping — bitwise, not allclose).
+* ``fit_workload_spec`` is a pure function of (trace, seed): two calls
+  produce identical pytree leaves (the CRN pairing discipline).
+* The fit recovers planted hot-set / duty-cycle structure.
+* A captured trace runs as an ``experiment.sweep`` lane (trace-replay
+  mode) — the serving-traffic-as-workload acceptance path.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.simulator import traces
+from repro.simulator.workload_spec import NEVER
+
+def _integer_steps(S=40, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 50, (S, n)).astype(np.float64)
+
+
+class TestCaptureConservation:
+    def test_round_trip_conserves_counts_exactly(self):
+        steps = _integer_steps()
+        tw = traces.capture_from_steps(steps, group=4)
+        assert tw.counts.shape == (10, 8)
+        # EXACT f64 equality, not allclose: integer-valued counts summed
+        # by reduceat must reproduce the per-cell and total sums bitwise.
+        assert tw.total() == float(steps.sum())
+        want = steps.reshape(10, 4, 8).sum(axis=1)
+        np.testing.assert_array_equal(tw.counts, want)
+
+    def test_streaming_capture_matches_one_shot(self):
+        steps = _integer_steps(S=24, n=5, seed=3)
+        cap = traces.TraceCapture(n=5, group=3)
+        for row in steps:
+            cap.add(row)
+        assert cap.steps == 24
+        tw = cap.finish(label="stream")
+        np.testing.assert_array_equal(
+            tw.counts, traces.capture_from_steps(steps, group=3).counts)
+        assert tw.meta["steps"] == 24 and tw.meta["group"] == 3
+
+    def test_partial_interval_kept_and_conserved(self):
+        steps = _integer_steps(S=10, n=4, seed=1)
+        tw = traces.capture_from_steps(steps, group=4)   # 4+4+2
+        assert tw.T == 3
+        assert tw.total() == float(steps.sum())
+        np.testing.assert_array_equal(tw.counts[2], steps[8:].sum(0))
+
+    def test_drop_partial(self):
+        steps = _integer_steps(S=10, n=4, seed=2)
+        cap = traces.TraceCapture(n=4, group=4)
+        for row in steps:
+            cap.add(row)
+        tw = cap.finish(drop_partial=True)
+        assert tw.T == 2
+        assert tw.total() == float(steps[:8].sum())
+
+    def test_save_load_round_trip(self, tmp_path):
+        tw = traces.capture_from_steps(_integer_steps(), group=2,
+                                       label="kv-l0")
+        path = str(tmp_path / "trace.npz")
+        tw.save(path)
+        back = traces.TraceWorkload.load(path)
+        np.testing.assert_array_equal(back.counts, tw.counts)
+        assert back.label == "kv-l0"
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError):
+            traces.TraceWorkload(np.zeros(5))
+        cap = traces.TraceCapture(n=4)
+        with pytest.raises(ValueError):
+            cap.add(np.zeros(3))
+        with pytest.raises(ValueError):
+            cap.finish()
+
+
+class TestFitDeterminism:
+    def test_fit_is_bit_deterministic_under_fixed_seed(self):
+        tw = traces.capture_from_steps(_integer_steps(S=64, n=16, seed=9),
+                                       group=2)
+        a = traces.fit_workload_spec(tw, seed=3)
+        b = traces.fit_workload_spec(tw, seed=3)
+        la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert jax.tree_util.tree_structure(a) \
+            == jax.tree_util.tree_structure(b)
+
+    def test_fit_label_and_scale_independence(self):
+        """The fitted knobs are fractional in n — fitting an 8-page trace
+        yields a spec whose hot_frac applies at any n."""
+        tw = traces.capture_from_steps(_integer_steps(), group=4,
+                                       label="kv")
+        spec = traces.fit_workload_spec(tw)
+        from repro.simulator.workload_spec import label_of
+        assert label_of(spec, "") == "fit:kv"
+
+
+class TestFitRecoversStructure:
+    def test_static_hotset(self):
+        """4 of 32 pages carry ~95% of a steady stream -> hot_frac 1/8,
+        high hot_weight, no churn (shift_every == NEVER), full duty."""
+        T, n = 64, 32
+        rng = np.random.default_rng(0)
+        counts = rng.uniform(0.5, 1.5, (T, n))
+        counts[:, :4] *= 150.0
+        spec = traces.fit_workload_spec(traces.TraceWorkload(counts))
+        from repro.simulator.workload_spec import _to_comps
+        (c,) = _to_comps(spec)
+        assert abs(c["hot_frac"] - 4 / 32) < 0.05
+        assert c["hot_weight"] > 0.9
+        assert c["shift_every"] == NEVER
+        assert c["duty"] == 1.0
+
+    def test_duty_cycle(self):
+        """Bursts of 4 busy intervals every 8 -> period ~8, duty ~0.5."""
+        T, n = 64, 16
+        rng = np.random.default_rng(1)
+        counts = rng.uniform(50, 60, (T, n))
+        busy = (np.arange(T) % 8) < 4
+        counts[~busy] *= 0.001
+        spec = traces.fit_workload_spec(traces.TraceWorkload(counts))
+        from repro.simulator.workload_spec import _to_comps
+        (c,) = _to_comps(spec)
+        assert abs(c["period"] - 8) <= 1
+        assert abs(c["duty"] - 0.5) < 0.15
+        assert c["idle_scale"] < 0.05
+
+    def test_churning_hotset_fits_finite_shift(self):
+        """A hot set that relocates every ~16 intervals fits a finite
+        shift_every (static traces fit NEVER — contrast above)."""
+        T, n = 96, 32
+        rng = np.random.default_rng(2)
+        counts = rng.uniform(0.5, 1.5, (T, n))
+        for t in range(T):
+            start = (4 * (t // 16)) % n
+            counts[t, start:start + 4] *= 100.0
+        spec = traces.fit_workload_spec(traces.TraceWorkload(counts))
+        from repro.simulator.workload_spec import _to_comps
+        (c,) = _to_comps(spec)
+        assert c["shift_every"] < NEVER
+
+
+class TestReplay:
+    def test_trace_replays_as_sweep_lane(self):
+        """The captured stream is a first-class experiment lane: the
+        workload axis collapses to ["trace"] and every policy family
+        produces a finite SimResult."""
+        steps = _integer_steps(S=48, n=16, seed=11)
+        steps[:, :4] *= 40.0                       # plant a hot set
+        tw = traces.capture_from_steps(steps, group=2, label="serve")
+        res = traces.replay(tw, ["arms", "all-slow", "oracle"], k=4)
+        assert res.axes["workload"] == ["trace"]
+        arms = res.at(policy="arms", workload="trace")
+        allslow = res.at(policy="all-slow", workload="trace")
+        oracle = res.at(policy="oracle", workload="trace")
+        assert np.isfinite(arms.exec_time_s) and arms.exec_time_s > 0
+        assert allslow.promotions == 0 and allslow.fast_hit_frac == 0.0
+        assert arms.promotions > 0 and arms.fast_hit_frac > 0.0
+        # the planted hot set is catchable: the oracle beats all-slow
+        assert oracle.exec_time_s < allslow.exec_time_s
