@@ -12,8 +12,9 @@ Four pieces, one record (``BENCH_serving.json``):
   is captured as a ``TraceWorkload``, fitted to WorkloadSpec knobs, and
   swept TOGETHER with the multi-tenant ``scenarios.serving_mix`` built
   from the fitted spec, for every leaderboard policy family across
-  machines — ONE ``experiment.sweep`` call, one compiled dispatch per
-  family (asserted via ``scan_engine.dispatch_count``).
+  machines — ONE ``experiment.sweep`` call, which the union fabric
+  (simulator/fabric.py) compiles to ONE dispatch for the whole
+  mixed-family panel (counted via ``scan_engine.count_dispatches``).
 * **trace replay** — the captured trace itself runs as a sweep lane
   (``traces.replay``), appearing as the ``trace`` scenario row of the
   board.
@@ -121,16 +122,16 @@ def run_serving(n_tokens: int = 32, batch: int = 2, T: int = 96,
     mix = scenarios.serving_mix(n, k, tenants=tenants, specs=[fit])
     n_families = len({type(experiment.policy_spec(p)) for p in policies})
 
-    d0 = scan_engine.dispatch_count
     t0 = time.time()
-    res = experiment.sweep(list(policies), workloads=[fit, mix],
-                           machines=list(machines), k=k, T=T, n=n)
-    sweep_disp = scan_engine.dispatch_count - d0
-    d0 = scan_engine.dispatch_count
-    # the replay lane runs at the CAPTURED geometry (tw.n pages), with a
-    # proportional fast tier
-    rep = traces.replay(tw, list(policies), machines=list(machines))
-    replay_disp = scan_engine.dispatch_count - d0
+    with scan_engine.count_dispatches() as ctr:
+        res = experiment.sweep(list(policies), workloads=[fit, mix],
+                               machines=list(machines), k=k, T=T, n=n)
+    sweep_disp = ctr.count
+    with scan_engine.count_dispatches() as ctr:
+        # the replay lane runs at the CAPTURED geometry (tw.n pages), with
+        # a proportional fast tier
+        rep = traces.replay(tw, list(policies), machines=list(machines))
+    replay_disp = ctr.count
     wall = time.time() - t0
 
     board = _board(res)
@@ -157,8 +158,7 @@ def run_serving(n_tokens: int = 32, batch: int = 2, T: int = 96,
         scenarios=scen_rows, machines=list(machines),
         policies=list(map(str, policies)), n_families=n_families,
         sweep_dispatches=sweep_disp, replay_dispatches=replay_disp,
-        single_dispatch_per_family=(sweep_disp == n_families
-                                    and replay_disp == n_families),
+        single_dispatch=sweep_disp == 1 and replay_disp == 1,
         wall_s=round(wall, 3), ranking=ranked, leaderboard=board)
 
 

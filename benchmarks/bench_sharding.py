@@ -1,0 +1,174 @@
+"""Mesh sweep fabric benchmark: lanes-per-second vs mesh size, and
+union vs grouped dispatch on a mixed-family panel -> BENCH_sharding.json.
+
+The fabric (simulator/fabric.py) promises two things this bench
+measures and the ``bench_sharding_gate`` in run.py --quick asserts:
+
+* **Sharding is free correctness-wise** — the same mixed-family
+  P×W×M×S panel, run unsharded and under ``shard_map`` at mesh sizes
+  {1, 2, 4, 8}, is bitwise-identical cell for cell (padded lanes are
+  dropped before labeling, so non-multiple lane counts are exercised
+  on purpose).
+* **The union state kills the per-family dispatch** — the mixed board
+  is exactly ONE compiled program (``scan_engine.count_dispatches``),
+  vs one per family on the grouped path, without losing bitwise
+  equality.
+
+Mesh sizes > 1 need the host platform split into virtual devices
+BEFORE jax initializes, so this script re-execs itself with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` appended; the
+gate just runs the script as a subprocess and reads the JSON back.
+Throughput context: on a multi-core (or genuinely multi-device) host
+the lane shards run concurrently and the curve scales; CI containers
+pinned to one core still must stay within noise of the unsharded path
+(the gate bound is >= 0.5x, recorded honestly either way).
+
+Usage: PYTHONPATH=src:. python benchmarks/bench_sharding.py \
+           [--gate] [--out BENCH_sharding.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+_CHILD_ENV = "_BENCH_SHARDING_CHILD"
+_FORCE_FLAG = "--xla_force_host_platform_device_count=8"
+
+#: the mixed-family gate panel: binary + tier-native + oracle families.
+POLICIES = ("oracle", "arms", "hemem", "memtis", "tpp",
+            "hybridtier", "jenga", "tierbpf")
+WORKLOADS = ("gups", "btree", "silo-tpcc")
+MACHINES = ("pmem-large", "dram-cxl-pmem")
+MESH_SIZES = (1, 2, 4, 8)
+
+
+def _cells(res):
+    """Every scalar/summary field of every cell, as a flat list of numpy
+    arrays (bitwise comparison payload)."""
+    import dataclasses
+
+    import numpy as np
+    fields = [f.name for f in dataclasses.fields(type(res.grid[0]))
+              if f.name != "name"]
+    out = []
+    for _, r in res.items():
+        out.extend(np.asarray(getattr(r, f)) for f in fields
+                   if getattr(r, f) is not None)
+    return out
+
+
+def run_sharding(T: int, n: int, k: int, policies=POLICIES,
+                 workloads=WORKLOADS, machines=MACHINES,
+                 mesh_sizes=MESH_SIZES) -> dict:
+    """Measure the fabric; requires jax.device_count() >= max(mesh_sizes)
+    (the __main__ re-exec guarantees it)."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.simulator import experiment, scan_engine
+
+    def timed(**kw):
+        with scan_engine.count_dispatches() as ctr:
+            t0 = time.time()
+            res = experiment.sweep(list(policies), workloads=list(workloads),
+                                   machines=list(machines), k=k, T=T, n=n,
+                                   **kw)
+            jax.block_until_ready(
+                [np.asarray(res.grid[0].exec_time_s)])
+        return res, time.time() - t0, ctr.count, dict(ctr.last)
+
+    n_families = len({type(experiment.policy_spec(p))
+                      for p in policies})
+    lanes = len(policies) * len(workloads) * len(machines)
+
+    base, cold_u, disp_u, info_u = timed()            # auto -> union
+    _, warm_u, _, _ = timed()
+    _, cold_g, disp_g, _ = timed(dispatch="grouped")
+    _, warm_g, _, _ = timed(dispatch="grouped")
+    ref = _cells(base)
+
+    curve, bitwise_all = [], True
+    for D in mesh_sizes:
+        res_d, cold_d, _, info_d = timed(mesh=D)
+        _, warm_d, _, _ = timed(mesh=D)
+        eq = all(np.array_equal(a, b) for a, b in zip(ref, _cells(res_d)))
+        bitwise_all &= eq
+        curve.append(dict(
+            mesh=D, padded_lanes=info_d.get("padded_lanes"),
+            cold_s=round(cold_d, 3), warm_s=round(warm_d, 4),
+            lanes_per_s=round(lanes / max(warm_d, 1e-9), 1),
+            bitwise_equal_to_unsharded=bool(eq)))
+
+    unsharded_lps = lanes / max(warm_u, 1e-9)
+    best = max(curve, key=lambda c: c["lanes_per_s"])
+    return dict(
+        T=T, n_pages=n, k=k, lanes=lanes, devices=jax.device_count(),
+        policies=list(policies), n_families=n_families,
+        workloads=list(workloads), machines=list(machines),
+        union=dict(dispatches=disp_u, cold_s=round(cold_u, 3),
+                   warm_s=round(warm_u, 4),
+                   lanes_per_s=round(unsharded_lps, 1)),
+        grouped=dict(dispatches=disp_g, cold_s=round(cold_g, 3),
+                     warm_s=round(warm_g, 4)),
+        union_single_dispatch=disp_u == 1,
+        grouped_dispatch_per_family=disp_g == n_families,
+        union_compile_win=round(cold_g / max(cold_u, 1e-9), 3),
+        mesh_curve=curve, bitwise_all_meshes=bool(bitwise_all),
+        best_mesh=best["mesh"],
+        sharded_throughput_ratio=round(
+            best["lanes_per_s"] / max(unsharded_lps, 1e-9), 3))
+
+
+def _child(args) -> None:
+    if args.gate:
+        rec, key = run_sharding(T=96, n=256, k=32), "gate"
+    else:
+        rec, key = run_sharding(T=240, n=512, k=64), "full"
+    try:
+        with open(args.out) as f:
+            out = json.load(f)
+    except (OSError, ValueError):
+        out = {}
+    out[key] = rec
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"lanes={rec['lanes']} devices={rec['devices']} "
+          f"union={rec['union']['dispatches']} dispatch(es) "
+          f"(grouped {rec['grouped']['dispatches']}) "
+          f"bitwise_all={rec['bitwise_all_meshes']}")
+    for c in rec["mesh_curve"]:
+        print(f"  mesh={c['mesh']}: {c['lanes_per_s']} lanes/s "
+              f"(warm {c['warm_s']}s, bitwise="
+              f"{c['bitwise_equal_to_unsharded']})")
+    print(f"  unsharded: {rec['union']['lanes_per_s']} lanes/s -> "
+          f"ratio {rec['sharded_throughput_ratio']} at "
+          f"mesh={rec['best_mesh']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_sharding.json")
+    ap.add_argument("--gate", action="store_true",
+                    help="gate scale (CI); default is the full record")
+    args = ap.parse_args()
+    if os.environ.get(_CHILD_ENV) == "1":
+        _child(args)
+        return
+    # re-exec with the host platform split into 8 virtual devices; the
+    # flag must be set before jax initializes anywhere in the process.
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + _FORCE_FLAG).strip()
+    env[_CHILD_ENV] = "1"
+    raise SystemExit(subprocess.run(
+        [sys.executable, os.path.abspath(__file__)] + sys.argv[1:],
+        env=env).returncode)
+
+
+if __name__ == "__main__":
+    main()

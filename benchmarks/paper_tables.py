@@ -473,8 +473,9 @@ def bench_robustness_gate():
     binary baselines through the tier-native shim, the three tier-native
     families, and the oracle — scored on the adversarial thrashing suite
     across three machine topologies.  Asserts (a) the whole
-    policy x scenario x machine board compiles to ONE lane-batched
-    dispatch per family, and (b) ARMS' worst-case slowdown vs the
+    mixed-family policy x scenario x machine board compiles to exactly
+    ONE lane-batched dispatch (the union fabric, simulator/fabric.py),
+    and (b) ARMS' worst-case slowdown vs the
     per-cell oracle stays bounded (with the oracle's self-slowdown
     exactly 1 as a scoring sanity check).  Records the gate-scale board
     in BENCH_robustness.json under "gate"
@@ -492,11 +493,11 @@ def bench_robustness_gate():
          f"dispatches={rec['dispatches']};families={rec['n_families']};"
          f"arms_worst={arms['worst_slowdown']:.3f}@{arms['worst_cell']};"
          f"arms_thrash={arms['mean_thrash']:.3f}")
-    claim("robustness board is ONE compiled dispatch per policy family",
-          f"{rec['dispatches']} dispatches for {rec['n_families']} "
+    claim("mixed-family robustness board is exactly ONE compiled dispatch",
+          f"{rec['dispatches']} dispatch(es) for {rec['n_families']} "
           "families",
-          "scenario x machine grid rides the lane axis, never a loop",
-          rec["single_dispatch_per_family"])
+          "union fabric fuses every family onto one lane axis, no loops",
+          rec["single_dispatch"])
     claim("ARMS worst-case slowdown on the adversarial suite",
           f"{arms['worst_slowdown']:.2f}x at {arms['worst_cell']} "
           f"(mean {arms['mean_slowdown']:.2f}x)",
@@ -525,7 +526,8 @@ def bench_serving_gate():
     swept — together with the multi-tenant ``scenarios.serving_mix``
     built from the fit AND the raw trace replay — across every
     leaderboard policy family.  Asserts (a) the serving sweep and the
-    trace replay each compile to ONE lane-batched dispatch per family,
+    trace replay each compile to exactly ONE mixed-family dispatch (the
+    union fabric, simulator/fabric.py),
     (b) the captured trace appears as a scenario row of the board next
     to the fitted lane, and (c) the device-side telemetry carry did not
     collapse throughput vs the legacy per-token host-sync path.  Records
@@ -547,11 +549,11 @@ def bench_serving_gate():
          f"families={rec['n_families']};"
          f"sync_speedup={sync['speedup']:.3f};"
          f"trace={rec['trace']['T']}x{rec['trace']['n']}")
-    claim("serving sweep + trace replay are ONE dispatch per family",
+    claim("serving sweep + trace replay are each ONE mixed-family dispatch",
           f"{rec['sweep_dispatches']}+{rec['replay_dispatches']} "
           f"dispatches for {rec['n_families']} families",
-          "fitted/mix lanes and the replay ride the lane axis, no loops",
-          rec["single_dispatch_per_family"])
+          "fitted/mix lanes and the replay ride one union lane axis",
+          rec["single_dispatch"])
     claim("captured serving trace is a leaderboard scenario row",
           f"rows={rec['scenarios']}",
           "trace + fit:<label> + serving-mix rows present",
@@ -575,6 +577,67 @@ def bench_serving_gate():
     with open("BENCH_serving.json", "w") as f:
         json.dump(out, f, indent=1)
         f.write("\n")
+
+
+# ----------------------- CI gate: mesh sweep fabric (sharding + union)
+def bench_sharding_gate():
+    """Quick-gate for the mesh sweep fabric (simulator/fabric.py, bench in
+    benchmarks/bench_sharding.py): the mixed-family panel must (a) be
+    bitwise-identical unsharded and at every mesh size in {1, 2, 4, 8}
+    (run in a subprocess — splitting the host into virtual devices needs
+    XLA_FLAGS set before jax initializes), (b) compile to exactly ONE
+    union dispatch where the grouped path needs one per family, and (c)
+    keep sharded throughput within noise of the unsharded path (>= 0.5x
+    on a single-core CI host; on real multi-device hosts the curve
+    scales).  Records the curve in BENCH_sharding.json under "gate"
+    (benchmarks/bench_sharding.py writes the full-scale record)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    script = os.path.join(os.path.dirname(__file__), "bench_sharding.py")
+    t0 = time.time()
+    proc = subprocess.run([sys.executable, script, "--gate"],
+                          capture_output=True, text=True)
+    wall = time.time() - t0
+    rec = {}
+    if proc.returncode == 0:
+        try:
+            with open("BENCH_sharding.json") as f:
+                rec = json.load(f)["gate"]
+        except (OSError, ValueError, KeyError):
+            rec = {}
+    if not rec:
+        tail = (proc.stderr or proc.stdout or "")[-300:]
+        claim("mesh fabric gate subprocess produced a record",
+              f"rc={proc.returncode}: {tail!r}", "BENCH_sharding.json gate "
+              "record written", False)
+        return
+    curve = {c["mesh"]: c["lanes_per_s"] for c in rec["mesh_curve"]}
+    emit("sharding_gate", wall * 1e6,
+         f"lanes={rec['lanes']};devices={rec['devices']};"
+         f"union_disp={rec['union']['dispatches']};"
+         f"grouped_disp={rec['grouped']['dispatches']};"
+         + ";".join(f"mesh{m}={v}l/s" for m, v in sorted(curve.items()))
+         + f";unsharded={rec['union']['lanes_per_s']}l/s")
+    claim("mesh-sharded sweep bitwise == unsharded at {1,2,4,8}",
+          f"bitwise_all={rec['bitwise_all_meshes']} over "
+          f"{len(rec['mesh_curve'])} mesh sizes x {rec['lanes']} lanes",
+          "every cell bitwise-identical, padded lanes dropped",
+          rec["bitwise_all_meshes"])
+    claim("mixed-family board: ONE union dispatch vs one per family",
+          f"union={rec['union']['dispatches']}, "
+          f"grouped={rec['grouped']['dispatches']} "
+          f"({rec['n_families']} families)",
+          "union == 1 and grouped == n_families",
+          rec["union_single_dispatch"]
+          and rec["grouped_dispatch_per_family"])
+    claim("sharded throughput within noise of unsharded",
+          f"{rec['sharded_throughput_ratio']}x at mesh="
+          f"{rec['best_mesh']}",
+          ">= 0.5x on shared-core virtual devices",
+          rec["sharded_throughput_ratio"] >= 0.5)
 
 
 # ------------------------------------------------------------------ Fig. 7

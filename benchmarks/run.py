@@ -42,7 +42,11 @@ def main() -> None:
     # The serving gate closes the model-stack loop: decode traffic on the
     # policy-generic tiered paged-KV pool, captured -> fitted -> swept
     # with the trace-replay lane, one dispatch per family — recorded in
-    # BENCH_serving.json.
+    # BENCH_serving.json.  The sharding gate runs the mesh sweep fabric
+    # (union dispatch + shard_map lane sharding) in a forced-8-device
+    # subprocess: bitwise equality at every mesh size, ONE dispatch for
+    # the whole mixed-family board, throughput within noise — recorded
+    # in BENCH_sharding.json.
     pt.bench_baseline_sweep_gate()
     pt.bench_workload_sweep_gate()
     pt.bench_machine_sweep_gate()
@@ -52,6 +56,7 @@ def main() -> None:
     pt.bench_machine_sensitivity()
     pt.bench_robustness_gate()
     pt.bench_serving_gate()
+    pt.bench_sharding_gate()
     pt.bench_main_comparison()
     pt.bench_migrations()
     pt.bench_adaptivity()

@@ -140,6 +140,11 @@ class PolicySpec:
     #: ``tier_policy`` and set this; binary specs reach the targeted
     #: executor through the base shim (module docstring).
     tier_native: bool = False
+    #: specs whose LANES mix observation kinds (simulator/fabric.py union
+    #: specs: some lanes want true counts, some sampled; some carry a
+    #: per-lane mechanism overhead).  The scan engine then consults the
+    #: per-lane hooks below instead of the class-level flags.
+    mixed_observation: bool = False
 
     DEFAULT_SAMPLE_PERIOD = 10_000.0
 
@@ -177,6 +182,18 @@ class PolicySpec:
     def mode_of(self, state):
         """Controller mode for the SimResult timeline (ARMS; 0 elsewhere)."""
         return jnp.zeros((), jnp.int32)
+
+    # --- per-lane hooks (``mixed_observation`` specs only) ----------------
+    def wants_true_lane(self):
+        """Scalar bool: does THIS lane observe true counts (oracle lanes
+        of a union spec)?  Only consulted when ``mixed_observation``."""
+        return jnp.asarray(type(self).wants_true_counts)
+
+    def slow_extra_lane(self):
+        """Scalar f32: this lane's per-slow-access overhead in ns (TPP
+        lanes of a union spec).  Only consulted when ``mixed_observation``;
+        0.0 lanes add a bitwise no-op (+0.0) to the wall term."""
+        return jnp.float32(type(self).slow_access_extra_ns)
 
     def policy(self, state, slow_bw, app_bw, k: int):
         """-> (state, promote, demote): the full policy pass.

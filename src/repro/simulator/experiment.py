@@ -48,7 +48,7 @@ from repro.baselines.memtis import MemtisSpec
 from repro.baselines.static import AllSlowSpec, OracleSpec
 from repro.baselines.tierbpf import TierBPFSpec
 from repro.baselines.tpp import TPPSpec
-from repro.simulator import machine_spec, scan_engine, workload_spec
+from repro.simulator import fabric, machine_spec, scan_engine, workload_spec
 from repro.simulator import machines as machines_mod
 from repro.simulator.engine import SimResult, oracle_topk_masks
 from repro.simulator.sampling import uniform_field
@@ -173,9 +173,10 @@ def _resolve_workloads(workloads, T):
 def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
           seeds=(0,), k: int, T: int | None = None, n: int | None = None,
           sim_seed: int = 0, wl_seed: int = 0, sample_u=None,
-          timelines: bool = False,
-          use_interval_kernel: bool = True) -> SweepResult:
-    """Axis-product sweep; ONE lane-batched dispatch per policy family.
+          timelines: bool = False, use_interval_kernel: bool = True,
+          dispatch: str = "auto", mesh=None,
+          _pad_multiple=None) -> SweepResult:
+    """Axis-product sweep; ONE lane-batched dispatch for the whole panel.
 
     ``policies``: policy names and/or PolicySpec instances (a tuning grid
     is a list of same-family specs).  ``workloads``: workload names /
@@ -194,6 +195,18 @@ def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
     stacked [T] ``timeline_*`` series.  Scalar results are identical
     either way.  ``use_interval_kernel=False`` pins the historical
     unfused interval path (equivalence tests / kernel benchmark only).
+
+    ``dispatch`` selects how mixed-family panels compile: ``"auto"``
+    (default) fuses >1 distinct family into ONE program via the union
+    fabric (simulator/fabric.py) and leaves single-family panels on the
+    plain stacked path; ``"union"`` / ``"grouped"`` force either side
+    (grouped = historical one-dispatch-per-family, the union path's
+    bitwise reference).  ``mesh`` shards the lane axis over devices:
+    ``None`` (no sharding), ``"auto"`` (all local devices), or an int
+    device count — results are bitwise-identical at any mesh size;
+    padded lanes are dropped before labeling.  ``_pad_multiple`` is
+    test-only: it forces lane padding even on a 1-device mesh so the
+    padding/labeling honesty is regression-testable anywhere.
     """
     reduce = "stack" if timelines else "stream"
     policies = [policies] if not isinstance(policies, (list, tuple)) \
@@ -247,12 +260,30 @@ def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
         sampling = "prng"
         sample = jnp.zeros((T, 1), jnp.float32)
 
-    # group same-family policies: different state pytrees cannot stack.
-    groups: dict = {}
-    for i, sp in enumerate(pol_specs):
-        groups.setdefault(type(sp), []).append(i)
-
+    # group same-family policies: different state pytrees cannot stack —
+    # unless the union fabric fuses the mixed panel into ONE group (and
+    # therefore ONE compiled program).
+    if dispatch not in ("auto", "union", "grouped"):
+        raise ValueError(f"dispatch={dispatch!r}; "
+                         "expected auto | union | grouped")
     mach_all, caps_all = machine_spec.lane_stack(mach_specs, n, k)
+    n_families = len({jax.tree_util.tree_structure(sp)
+                      for sp in pol_specs})
+    use_union = dispatch == "union" or (dispatch == "auto"
+                                        and n_families > 1)
+    if use_union:
+        lane_specs = fabric.build_union(pol_specs, n, k, mach_all)
+        groups = {fabric.UnionSpec: list(range(P))}
+    else:
+        lane_specs = pol_specs
+        # key on the TREEDEF (class + meta), not the class: same-family
+        # specs with different meta (e.g. migration_limit) have different
+        # pad widths and cannot stack leaf-wise.
+        groups = {}
+        for i, sp in enumerate(pol_specs):
+            groups.setdefault(jax.tree_util.tree_structure(sp),
+                              []).append(i)
+
     grid = [None] * (P * W * M * S)
     for cls, idxs in groups.items():
         Pg = len(idxs)
@@ -262,34 +293,37 @@ def sweep(policies, *, workloads=None, trace=None, machines="pmem-large",
         m_of = (lane // S) % M
         s_of = lane % S
         spec_l = scan_engine._take_lanes(
-            scan_engine._stack_specs([pol_specs[i] for i in idxs]),
+            scan_engine._stack_specs([lane_specs[i] for i in idxs]),
             jnp.asarray(p_local, jnp.int32))
         mach_l = scan_engine._take_lanes(mach_all,
                                          jnp.asarray(m_of, jnp.int32))
         caps_l = jnp.take(caps_all, jnp.asarray(m_of, jnp.int32), axis=0)
         keys = jnp.stack([jax.random.PRNGKey(int(seeds[s])) for s in s_of])
-        min_period = min(pol_specs[i].min_sampling_period() for i in idxs)
+        min_period = min(lane_specs[i].min_sampling_period() for i in idxs)
         if synth:
-            out = scan_engine._sim_synth_jit(
+            out, finfo = fabric.sim_synth(
                 spec_l, wl, k, mach_l, caps_l, keys, sample,
                 jax.random.PRNGKey(sim_seed),
                 jnp.stack([jax.random.PRNGKey(wl_seed)] * W),
                 sampling,
                 scan_engine._synth_need_normal(wl_specs, min_period),
                 Pg * M * S, n, wl_boost=wl_boost,
-                interval_kernel=use_interval_kernel, reduce=reduce)
+                interval_kernel=use_interval_kernel, reduce=reduce,
+                mesh=mesh, pad_multiple=_pad_multiple)
         else:
-            out = scan_engine._sim_jit(
+            out, finfo = fabric.sim_trace(
                 spec_l, jnp.asarray(trace, jnp.float32),
                 jnp.asarray(oracle), k, mach_l, caps_l, keys, sample,
                 sampling, scan_engine._need_normal(trace, min_period),
-                interval_kernel=use_interval_kernel, reduce=reduce)
+                interval_kernel=use_interval_kernel, reduce=reduce,
+                mesh=mesh, pad_multiple=_pad_multiple)
         out = scan_engine._timelines_lane_major(out)
         scan_engine._record_dispatch(
-            lanes=L, sampling=sampling, policy=pol_specs[idxs[0]].name,
+            lanes=L, sampling=sampling, policy=lane_specs[idxs[0]].name,
             synth=synth, workloads=W, configs=Pg, machines=M, seeds=S, T=T,
             axis_product=True, interval_kernel=use_interval_kernel,
-            reduce=reduce)
+            reduce=reduce, dispatch="union" if use_union else "grouped",
+            families=n_families if use_union else 1, **finfo)
         for l in range(L):
             w = l // (Pg * M * S)
             p = idxs[p_local[l]]

@@ -62,6 +62,7 @@ signatures in lockstep.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import warnings
 
@@ -81,7 +82,7 @@ __all__ = [
     "SWEEPABLE", "simulate", "sweep_seeds", "sweep_policy_configs",
     "arms_sim", "sweep_arms_configs", "simulate_workload",
     "sweep_workloads", "sweep_workload_configs", "last_dispatch",
-    "dispatch_count",
+    "dispatch_count", "count_dispatches", "DispatchCounter",
 ]
 
 #: Info about the most recent compiled dispatch (lanes, sampling mode).
@@ -89,9 +90,49 @@ __all__ = [
 #: lane-batched instead of silently regressing to a sequential loop.
 last_dispatch: dict = {}
 #: monotone count of compiled simulation dispatches this process has issued
-#: (every ``_record_dispatch`` call).  The search engine and the CI search
-#: gate assert single-dispatch rounds by differencing it around an eval.
+#: (every ``_record_dispatch`` call).  Kept for observability; callers that
+#: ASSERT on dispatch deltas use ``count_dispatches`` below — differencing
+#: the global races when two measured regions interleave.
 dispatch_count: int = 0
+
+
+class DispatchCounter:
+    """Live tally handed out by ``count_dispatches``: ``count`` dispatches
+    so far, ``records`` their ``_record_dispatch`` info dicts in order."""
+
+    def __init__(self):
+        self.count = 0
+        self.records: list = []
+
+    @property
+    def last(self) -> dict:
+        return self.records[-1] if self.records else {}
+
+
+#: counters currently open via ``count_dispatches`` (nesting is fine: every
+#: open counter sees every dispatch issued inside its region).
+_active_counters: list = []
+
+
+@contextlib.contextmanager
+def count_dispatches():
+    """Context-managed dispatch counter for gates and the search engine.
+
+        with scan_engine.count_dispatches() as ctr:
+            experiment.sweep(...)
+        assert ctr.count == 1 and ctr.last["lanes"] == L
+
+    Unlike read-and-reset differencing of the module-global
+    ``dispatch_count``, concurrent/nested measured regions cannot race:
+    each region owns its counter and only dispatches issued within the
+    region are tallied.
+    """
+    ctr = DispatchCounter()
+    _active_counters.append(ctr)
+    try:
+        yield ctr
+    finally:
+        _active_counters.remove(ctr)
 
 
 def _need_normal(trace, min_period: float) -> bool:
@@ -180,7 +221,7 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
               sampling: str, need_normal: bool, wl=None, wl_keys=None,
               noise_key=None, wl_rep: int = 1, n: int | None = None,
               wl_boost: bool = True, interval_kernel: bool = True,
-              reduce: str = "stack", tier_shim: bool = False):
+              reduce: str = "stack", tier_shim: bool = False, widx=None):
     """Traceable batched replay; returns a dict of [B] scalars + timelines.
 
     Lanes (= sweep entries) form the leading axis of every carried array,
@@ -268,14 +309,24 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
         if sampling == "prng":
             u = jax.vmap(lambda s: jax.random.uniform(s, (n,), dtype=f32)
                          )(subs)
-            return pebs_sample_from_uniform(u, true_b, period,
-                                            need_normal=need_normal)
-        if sampling == "crn_prng":
+            sampled = pebs_sample_from_uniform(u, true_b, period,
+                                               need_normal=need_normal)
+        elif sampling == "crn_prng":
             u = synth_uniform_row(noise_key, t0, n)
-            return pebs_sample_from_uniform(u[None], true_b, period,
-                                            need_normal=need_normal)
-        return pebs_sample_from_uniform(xs_sample[None], true_b,
-                                        period, need_normal=need_normal)
+            sampled = pebs_sample_from_uniform(u[None], true_b, period,
+                                               need_normal=need_normal)
+        else:
+            sampled = pebs_sample_from_uniform(xs_sample[None], true_b,
+                                               period,
+                                               need_normal=need_normal)
+        if cls.mixed_observation:
+            # union lanes mixing observation kinds (fabric.py): oracle
+            # lanes read true counts, the rest keep the sampled row the
+            # whole batch shares — bitwise what each family's own
+            # dispatch would observe.
+            wt = jax.vmap(cls.wants_true_lane)(spec)            # [B]
+            sampled = jnp.where(wt[:, None], true_b, sampled)
+        return sampled
 
     def step(c, xs):
         if wl is None:
@@ -303,8 +354,17 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
             true_w = workt[:, None] * probs
             orc_w = (interval_ops.topk_mask(true_w, k) if interval_kernel
                      else jax.vmap(lambda x: _topk_mask(x, k))(true_w))
-            true_b = jnp.repeat(true_w, wl_rep, axis=0)          # [B, n]
-            orc_b = jnp.repeat(orc_w, wl_rep, axis=0)
+            if widx is None:
+                true_b = jnp.repeat(true_w, wl_rep, axis=0)      # [B, n]
+                orc_b = jnp.repeat(orc_w, wl_rep, axis=0)
+            else:
+                # sharded lanes (fabric.py): every shard synthesizes the
+                # full replicated [W] workload stack and gathers its own
+                # lanes' rows by GLOBAL workload index — a row gather is
+                # value-wise exactly the ``repeat`` above, so shard
+                # results are bitwise the unsharded path's.
+                true_b = jnp.take(true_w, widx, axis=0)          # [B, n]
+                orc_b = jnp.take(orc_w, widx, axis=0)
         state = c["state"]
         split = jax.vmap(jax.random.split, out_axes=1)(c["key"])
         key, subs = split[0], split[1]
@@ -433,7 +493,13 @@ def _simulate(spec, trace, oracle_mask, k: int, mach, caps, keys, sample,
                 mach, true_b, tier, mig_up.astype(f32),
                 mig_down.astype(f32))
             recall = ((tier == 0) & orc_b).sum(axis=1).astype(f32) / k
-        if cls.slow_access_extra_ns:
+        if cls.mixed_observation:
+            # per-lane mechanism overhead (union lanes): non-TPP lanes
+            # carry 0.0, and ``wall + acc_slow * 0.0 * 1e-9 / mlp`` adds
+            # +0.0 to a nonnegative finite wall — a bitwise no-op.
+            extra = jax.vmap(cls.slow_extra_lane)(spec)          # [B]
+            wall = wall + acc_slow * extra * f32(1e-9) / mach.mlp
+        elif cls.slow_access_extra_ns:
             # policy-mechanism overhead charged to the application (TPP's
             # NUMA hint faults are taken on slow-tier accesses).
             wall = wall + acc_slow * f32(cls.slow_access_extra_ns) \
@@ -626,9 +692,15 @@ def _record_dispatch(**info):
     if "T" in info and "lanes" in info:
         # lanes x intervals: the dispatch's compute spend in the unit the
         # search engine compares strategies on (SearchResult.lane_intervals).
+        # ``lanes`` is always the LOGICAL lane count — mesh padding reports
+        # its widened count separately (``padded_lanes``, fabric.py) so
+        # search compute curves stay comparable across mesh sizes.
         info["lane_intervals"] = int(info["lanes"]) * int(info["T"])
     last_dispatch.clear()
     last_dispatch.update(info)
+    for ctr in _active_counters:
+        ctr.count += 1
+        ctr.records.append(dict(info))
 
 
 # ------------------------------------------------------------- public API

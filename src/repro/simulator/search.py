@@ -164,12 +164,13 @@ class _EvalCtx:
     """
 
     def __init__(self, family, make, trace, machine, machines, workloads,
-                 k, T, n, sim_seed, base_cfg, space):
+                 k, T, n, sim_seed, base_cfg, space, mesh=None):
         if machines is not None and workloads is not None:
             raise ValueError("machine-lane and workload-lane search modes "
                              "cannot be combined; pass one of them")
         self.family, self.make, self.k = family, make, k
         self.sim_seed, self.base_cfg = sim_seed, base_cfg
+        self.mesh = mesh
         mach_in = list(machines) if machines is not None else [machine]
         self.machines = [machines_mod.get(m) for m in mach_in]
         self.wl_specs = None
@@ -208,35 +209,40 @@ class _EvalCtx:
         policy family (asserted by the CI search gate via the dispatch
         delta)."""
         horizon = int(horizon)
-        before = scan_engine.dispatch_count
-        if self.use_pre:
-            overrides = {nm: [cfg[nm] for cfg in configs]
-                         for nm in configs[0]}
-            results = scan_engine.sweep_arms_configs(
-                self.trace[:horizon], self.machines[0], self.k, overrides,
-                base_cfg=self.base_cfg, seed=self.sim_seed, reduce="stream")
-            per_group = [results]
-        else:
-            specs = [self.make(**cfg) for cfg in configs]
-            if self.group_axis == "workload":
-                res = experiment.sweep(
-                    specs, workloads=self.wl_specs,
-                    machines=[self.machines[0]], k=self.k, T=horizon,
-                    n=self.n, sim_seed=self.sim_seed)
-                per_group = [[res.at(policy=b, workload=g)
-                              for b in range(len(configs))]
-                             for g in range(len(self.groups))]
+        with scan_engine.count_dispatches() as ctr:
+            if self.use_pre:
+                # precomputed-grid path: single machine, single family, no
+                # lane batch to shard — ``mesh`` intentionally ignored.
+                overrides = {nm: [cfg[nm] for cfg in configs]
+                             for nm in configs[0]}
+                results = scan_engine.sweep_arms_configs(
+                    self.trace[:horizon], self.machines[0], self.k,
+                    overrides, base_cfg=self.base_cfg, seed=self.sim_seed,
+                    reduce="stream")
+                per_group = [results]
             else:
-                res = experiment.sweep(
-                    specs, trace=self.trace[:horizon],
-                    machines=self.machines, k=self.k,
-                    sim_seed=self.sim_seed)
-                per_group = [[res.at(policy=b, machine=g)
-                              for b in range(len(configs))]
-                             for g in range(len(self.groups))]
-        lanes = scan_engine.last_dispatch.get("lanes", len(configs))
-        dispatches = scan_engine.dispatch_count - before
-        return per_group, lanes, dispatches, lanes * horizon
+                specs = [self.make(**cfg) for cfg in configs]
+                if self.group_axis == "workload":
+                    res = experiment.sweep(
+                        specs, workloads=self.wl_specs,
+                        machines=[self.machines[0]], k=self.k, T=horizon,
+                        n=self.n, sim_seed=self.sim_seed, mesh=self.mesh)
+                    per_group = [[res.at(policy=b, workload=g)
+                                  for b in range(len(configs))]
+                                 for g in range(len(self.groups))]
+                else:
+                    res = experiment.sweep(
+                        specs, trace=self.trace[:horizon],
+                        machines=self.machines, k=self.k,
+                        sim_seed=self.sim_seed, mesh=self.mesh)
+                    per_group = [[res.at(policy=b, machine=g)
+                                  for b in range(len(configs))]
+                                 for g in range(len(self.groups))]
+        # ``lanes`` from the dispatch record is LOGICAL (pre-padding), so
+        # lane_intervals — and every ASHA/CE compute curve built from it —
+        # is identical at any mesh size.
+        lanes = ctr.last.get("lanes", len(configs))
+        return per_group, lanes, ctr.count, lanes * horizon
 
 
 def _union(pops):
@@ -445,7 +451,7 @@ def run(family: str, strategy: str = "asha", *, trace=None,
         ce_smoothing: float = 0.7, search_seed: int = 0, sim_seed: int = 0,
         space: dict | None = None, defaults: dict | None = None,
         base_cfg=None, configs=None, T: int | None = None,
-        n: int | None = None):
+        n: int | None = None, mesh=None):
     """Run one search strategy for one policy family.
 
     Modes mirror ``tuning.tune``: trace + single ``machine`` returns ONE
@@ -461,6 +467,11 @@ def run(family: str, strategy: str = "asha", *, trace=None,
     ``ceil(budget / ce_rounds)``); ``eta``/``rounds``/``t_min`` shape the
     ASHA ladder (``eta=1`` collapses to one full-horizon round — exactly
     grid search, bitwise).
+
+    ``mesh`` shards each round's lane batch over devices via the sweep
+    fabric (experiment.sweep) — results, rankings and lane-interval
+    compute curves are bitwise-identical at any mesh size (the ARMS
+    precomputed-grid fast path has no lane batch and ignores it).
     """
     from repro.simulator import tuning  # late import: tuning wraps run()
     if strategy not in STRATEGIES:
@@ -481,7 +492,7 @@ def run(family: str, strategy: str = "asha", *, trace=None,
     else:
         configs = [dict(c) for c in configs]
     ctx = _EvalCtx(family, make, trace, machine, machines, workloads, k,
-                   T, n, sim_seed, base_cfg, space)
+                   T, n, sim_seed, base_cfg, space, mesh=mesh)
     if strategy == "grid":
         out = _grid(ctx, family, configs)
     elif strategy == "asha":

@@ -242,6 +242,13 @@ def apply_targeted_migrations(tier, pages, dst, caps):
     integer/boolean, so the executed sets (and everything downstream) are
     bitwise identical.  Returns (tier, up_exec, down_exec, mig_up,
     mig_down) with the executed masks aligned to ``pages``.
+
+    TRAILING-SENTINEL INVARIANT (load-bearing for the union fabric,
+    simulator/fabric.py): appending sentinel (-1) entries AFTER a plan's
+    real moves is a bitwise no-op — invalid entries join neither phase,
+    and the cumsum admission ranks only count candidates, so earlier
+    entries' prefix sums are untouched.  This is what lets ``UnionSpec``
+    widen every member family's move list to one shared ``pad_mv``.
     """
     R = caps.shape[0]
     n = tier.shape[0]

@@ -178,7 +178,7 @@ def tune(family: str, trace, machine, k, budget: int = 24,
          n: int | None = None, *, strategy: str = "grid", machines=None,
          eta: int = 3, rounds: int | None = None, t_min: int = 16,
          ce_rounds: int = 4, elite_frac: float = 0.25,
-         ce_smoothing: float = 0.7, base_cfg=None):
+         ce_smoothing: float = 0.7, base_cfg=None, mesh=None):
     """Lane-batched tuning for any policy family, under any strategy.
 
     -> (best_config, best_result, all (config, result) rows sorted by exec
@@ -213,7 +213,8 @@ def tune(family: str, trace, machine, k, budget: int = 24,
 
     All modes inherit the sweep's streaming reduction — rows carry scalar
     summaries, not ``timeline_*`` arrays — so tuning memory is O(lanes)
-    regardless of T.
+    regardless of T.  ``mesh`` shards each round's lanes over devices
+    (simulator/fabric.py) with bitwise-identical rankings.
     """
     out = search.run(family, strategy, trace=trace, machine=machine,
                      machines=machines, workloads=workloads, k=k,
@@ -221,7 +222,7 @@ def tune(family: str, trace, machine, k, budget: int = 24,
                      ce_rounds=ce_rounds, elite_frac=elite_frac,
                      ce_smoothing=ce_smoothing, search_seed=search_seed,
                      sim_seed=sim_seed, space=space, defaults=defaults,
-                     base_cfg=base_cfg, T=T, n=n)
+                     base_cfg=base_cfg, T=T, n=n, mesh=mesh)
     if isinstance(out, dict):
         return {nm: _legacy(sr) for nm, sr in out.items()}
     return _legacy(out)

@@ -1,0 +1,71 @@
+"""Mesh > 1 half of the fabric equivalence suite (see tests/test_fabric.py).
+
+Splitting the host platform into virtual devices requires
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` BEFORE jax
+initializes, which the main pytest process has long since done — so the
+actual assertions run in one subprocess executing ``_MESH_SCRIPT``:
+mesh sizes {2, 8} (with a lane count that is NOT a multiple of either)
+must be bitwise-identical to the unsharded sweep, in synth and trace
+modes, under the default union dispatch.
+"""
+import os
+import subprocess
+import sys
+
+_MESH_SCRIPT = r"""
+import numpy as np, dataclasses, jax
+assert jax.device_count() == 8, jax.device_count()
+from repro.simulator import experiment, scan_engine, workloads
+from repro.simulator.engine import SimResult
+from repro.simulator.sampling import uniform_field
+
+T, N, K = 32, 128, 16
+FIELDS = [f.name for f in dataclasses.fields(SimResult) if f.name != "name"]
+
+def check(ra, rb, tag):
+    assert ra.axes == rb.axes, tag
+    for (coords, a), (_, b) in zip(ra.items(), rb.items()):
+        for f in FIELDS:
+            va, vb = getattr(a, f), getattr(b, f)
+            if va is None and vb is None:
+                continue
+            assert np.array_equal(np.asarray(va), np.asarray(vb)), \
+                (tag, coords, f)
+
+# mixed families, 2- and 3-tier machines; 5*2*2 = 20 lanes — not a
+# multiple of 8, so mesh=8 exercises the pad-and-drop path.
+pols = ["arms", "hemem", "tpp", "oracle", "jenga"]
+kw = dict(workloads=["gups", "btree"], machines=["pmem-large",
+          "dram-cxl-pmem"], k=K, T=T, n=N, timelines=True)
+base = experiment.sweep(pols, **kw)
+for D in (2, 8):
+    with scan_engine.count_dispatches() as ctr:
+        res = experiment.sweep(pols, mesh=D, **kw)
+    assert ctr.count == 1 and ctr.last["mesh"] == D
+    assert ctr.last["lanes"] == 20
+    assert ctr.last["padded_lanes"] == -(-20 // D) * D
+    check(base, res, f"synth mesh={D}")
+
+trace = workloads.make("silo-tpcc", T=T, n=N)
+u = uniform_field(T, N, seed=3)
+kt = dict(trace=trace, machines=["pmem-large", "cxl-1hop"], k=K,
+          sample_u=u)
+bt = experiment.sweep(pols, **kt)
+check(bt, experiment.sweep(pols, mesh=8, **kt), "trace mesh=8")
+check(bt, experiment.sweep(pols, mesh="auto", **kt), "trace mesh=auto")
+print("MESH-OK")
+"""
+
+
+def test_mesh_sharded_sweeps_bitwise_equal_in_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MESH-OK" in proc.stdout

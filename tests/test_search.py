@@ -209,11 +209,11 @@ class TestRanking:
         scoring identically under CRN — keep draw order in the ranking."""
         cfg_a = dict(tuning.HEMEM_DEFAULTS)
         cfg_b = dict(cfg_a, hot_threshold=1)
-        before = scan_engine.dispatch_count
-        sr = search.run("hemem", "grid", trace=_trace(), k=K,
-                        configs=[cfg_a, cfg_b, cfg_a], sim_seed=0)
-        assert scan_engine.dispatch_count - before == 1
-        assert scan_engine.last_dispatch["lanes"] == 2  # union, not 3
+        with scan_engine.count_dispatches() as ctr:
+            sr = search.run("hemem", "grid", trace=_trace(), k=K,
+                            configs=[cfg_a, cfg_b, cfg_a], sim_seed=0)
+        assert ctr.count == 1
+        assert ctr.last["lanes"] == 2  # deduped population, not 3
         assert len(sr.rows) == 3
         dup = [i for i, (c, _) in enumerate(sr.rows) if c == cfg_a]
         assert dup == [dup[0], dup[0] + 1]  # adjacent, draw order

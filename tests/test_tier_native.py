@@ -244,23 +244,34 @@ class TestPairBudgetsEdges:
 
 
 class TestSweepIntegration:
-    """Tier-native and binary families mix in one sweep: one dispatch per
-    family, machine labels carried through for spec objects."""
+    """Tier-native and binary families mix in one sweep: ONE union
+    dispatch by default (one per family on the forced grouped path),
+    machine labels carried through for spec objects."""
 
-    def test_one_dispatch_per_family_with_tier_native(self):
+    def test_mixed_family_dispatch_counts(self):
         trace = workloads.make("gups", T=T, n=N)
         u = uniform_field(T, N, seed=123)
-        d0 = scan_engine.dispatch_count
-        res = experiment.sweep(["hemem", "jenga"], trace=trace,
-                               machines=["pmem-large", "dram-cxl-pmem"],
-                               k=K, sample_u=u)
-        assert scan_engine.dispatch_count - d0 == 2
+        with scan_engine.count_dispatches() as ctr:
+            res = experiment.sweep(["hemem", "jenga"], trace=trace,
+                                   machines=["pmem-large", "dram-cxl-pmem"],
+                                   k=K, sample_u=u)
+        # default dispatch="auto": the union fabric fuses both families.
+        assert ctr.count == 1
+        assert ctr.last["dispatch"] == "union"
+        assert ctr.last["families"] == 2
+        with scan_engine.count_dispatches() as ctr:
+            grp = experiment.sweep(["hemem", "jenga"], trace=trace,
+                                   machines=["pmem-large", "dram-cxl-pmem"],
+                                   k=K, sample_u=u, dispatch="grouped")
+        assert ctr.count == 2
         assert res.axes["policy"] == ["hemem", "jenga"]
         solo = scan_engine.simulate(JengaSpec.make(), trace,
                                     "dram-cxl-pmem", K, sample_u=u)
         cell = res.at(policy="jenga", machine="dram-cxl-pmem")
         assert cell.promotions == solo.promotions
         assert cell.exec_time_s == solo.exec_time_s
+        gcell = grp.at(policy="jenga", machine="dram-cxl-pmem")
+        assert gcell.exec_time_s == cell.exec_time_s
 
     def test_machine_spec_labels_not_anonymous(self):
         specs = [machines.get("pmem-large"), machines.get("cxl-1hop")]
